@@ -1,0 +1,51 @@
+"""Per-architecture reduced-config step benchmarks on CPU: regression
+tracking for the model substrate (full-config numbers are dry-run/roofline
+territory)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced_config
+from repro.models import init_model, train_loss
+
+ARCHS = ("internlm2-1.8b", "hymba-1.5b", "xlstm-350m", "deepseek-moe-16b",
+         "seamless-m4t-medium")
+
+
+def run(emit=print):
+    rows = []
+    for arch in ARCHS:
+        cfg = reduced_config(get_config(arch))
+        params, _ = init_model(cfg, jax.random.PRNGKey(0))
+        B, T = 2, 128
+        batch = {
+            "tokens": jnp.zeros((B, T), jnp.int32),
+            "labels": jnp.zeros((B, T), jnp.int32),
+        }
+        if cfg.encoder_layers:
+            batch["enc_emb"] = jnp.zeros((B, cfg.encoder_seq_len,
+                                          cfg.d_model), jnp.float32)
+
+        @jax.jit
+        def step(p, b):
+            (loss, _), grads = jax.value_and_grad(
+                lambda pp: train_loss(pp, cfg, b), has_aux=True)(p)
+            return loss, grads
+
+        loss, grads = step(params, batch)
+        jax.block_until_ready(loss)
+        t0 = time.perf_counter()
+        for _ in range(3):
+            jax.block_until_ready(step(params, batch)[0])
+        us = (time.perf_counter() - t0) / 3 * 1e6
+        rows.append((f"model/train_step_reduced/{arch}", us,
+                     f"B={B},T={T}"))
+        emit(f"model/train_step_reduced/{arch},{us:.0f},B={B},T={T}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,65 @@
+"""Paper §5 reproduction: runtime of parallel vs sequential IEKS/IPLS on
+the coordinated-turn bearings-only model, M=10 iterations (Fig. 1a/1b).
+
+This container is CPU-only, so this benchmark reproduces the *CPU* panel
+(Fig. 1a) directly — the paper's own CPU result is that the parallel
+formulation does MORE total work (higher wall-clock on a serial machine);
+the GPU panel (Fig. 1b) is characterized by the span metrics below
+(sequential span = 2n combine-equivalents per pass vs parallel span =
+~2*log2(n) Blelloch levels), which is exactly the paper's O(n) -> O(log n)
+claim; wall-clock on parallel hardware follows the span once cores >= n.
+"""
+from __future__ import annotations
+
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import IteratedConfig, iterated_smoother
+from repro.data import CoordinatedTurnConfig, make_coordinated_turn_model, \
+    simulate_trajectory
+
+M_ITERS = 10
+SIZES = (128, 256, 512, 1024, 2048, 4096)
+REPS = 3
+
+
+def _time_fn(fn, *args, reps=REPS):
+    fn(*args)  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(sizes=SIZES, methods=("ekf", "slr"), emit=print):
+    model = make_coordinated_turn_model(CoordinatedTurnConfig(),
+                                        dtype=jnp.float32)
+    rows = []
+    for n in sizes:
+        _, ys = simulate_trajectory(model, n, jax.random.PRNGKey(n))
+        for method in methods:
+            for parallel in (False, True):
+                cfg = IteratedConfig(method=method, n_iter=M_ITERS,
+                                     parallel=parallel)
+
+                @jax.jit
+                def smooth(y, _cfg=cfg):
+                    return iterated_smoother(model, y, _cfg).mean
+
+                dt = _time_fn(smooth, ys)
+                span = (2 * M_ITERS * n if not parallel
+                        else 2 * M_ITERS * 2 * math.ceil(math.log2(n)))
+                name = (f"paper_fig1a/{'IEKS' if method == 'ekf' else 'IPLS'}"
+                        f"-{'par' if parallel else 'seq'}/n={n}")
+                rows.append((name, dt * 1e6,
+                             f"span_combines={span}"))
+                emit(f"{name},{dt * 1e6:.1f},span_combines={span}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Benchmark harness — one module per paper table/figure + framework
+benches. Prints ``name,us_per_call,derived`` CSV (task spec deliverable
+(d)).
+
+  paper_fig1         — paper Fig. 1a/1b: parallel vs sequential IEKS/IPLS
+  paper_convergence  — IEKS/IPLS M=10 convergence + par==seq gap
+  kernels_bench      — Pallas kernel paths vs references
+  models_bench       — reduced-config train steps for the arch zoo
+
+Roofline/dry-run numbers (full configs, production mesh) come from
+``python -m repro.launch.dryrun --all`` — see EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", type=str, default=None,
+                   help="comma-separated subset: fig1,convergence,kernels,"
+                        "models")
+    p.add_argument("--quick", action="store_true",
+                   help="smaller sizes for CI")
+    args = p.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    # Convergence validation runs in float64 (covariance-form parallel
+    # smoothers are f32-fragile on long horizons — see the sqrt_parallel
+    # extension); runtime benches pin float32 explicitly like the paper.
+    import jax
+    jax.config.update("jax_enable_x64", True)
+
+    print("name,us_per_call,derived")
+    if only is None or "fig1" in only:
+        from benchmarks import paper_fig1
+        sizes = (128, 512, 2048) if args.quick else paper_fig1.SIZES
+        paper_fig1.run(sizes=sizes)
+    if only is None or "convergence" in only:
+        from benchmarks import paper_convergence
+        paper_convergence.run(n=200 if args.quick else 500)
+    if only is None or "kernels" in only:
+        from benchmarks import kernels_bench
+        kernels_bench.run()
+    if only is None or "models" in only:
+        from benchmarks import models_bench
+        models_bench.run()
+
+
+if __name__ == "__main__":
+    main()

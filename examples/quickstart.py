@@ -1,0 +1,43 @@
+"""Quickstart: parallel IEKS on the paper's coordinated-turn model.
+
+Simulates a bearings-only tracking problem, runs the paper's
+parallel-in-time iterated extended Kalman smoother (M=10), and compares
+against the sequential baseline — same posterior, logarithmic span.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import IteratedConfig, iterated_smoother
+from repro.data import (CoordinatedTurnConfig, make_coordinated_turn_model,
+                        simulate_trajectory)
+
+
+def main():
+    model = make_coordinated_turn_model(CoordinatedTurnConfig(),
+                                        dtype=jnp.float32)
+    xs, ys = simulate_trajectory(model, 400, jax.random.PRNGKey(0))
+    print(f"simulated {ys.shape[0]} bearings-only measurements")
+
+    # Levenberg-Marquardt damping (paper ref [15]) keeps Gauss-Newton
+    # convergent on long horizons; undamped IEKS diverges for n >~ 300 on
+    # this model (in parallel AND sequential form — it is an optimization
+    # property, not a parallelization artifact; see DESIGN.md).
+    sm_par = iterated_smoother(
+        model, ys, IteratedConfig(method="ekf", n_iter=10, parallel=True,
+                                  lm_lambda=1.0))
+    sm_seq = iterated_smoother(
+        model, ys, IteratedConfig(method="ekf", n_iter=10, parallel=False,
+                                  lm_lambda=1.0))
+
+    rmse = jnp.sqrt(jnp.mean((sm_par.mean[1:, :2] - xs[1:, :2]) ** 2))
+    gap = jnp.max(jnp.abs(sm_par.mean - sm_seq.mean))
+    print(f"IEKS (parallel scan, M=10): position RMSE = {float(rmse):.4f}")
+    print(f"parallel vs sequential max-abs gap = {float(gap):.2e}")
+    print("span: sequential O(n) = 400 combines/pass; "
+          "parallel O(log n) = ~18 levels/pass")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""LM serving example: batched greedy decoding with KV/SSM caches for any
+arch in the zoo (reduced config on CPU).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch hymba-1.5b
+"""
+import argparse
+
+from repro.launch.serve import ServeConfig, serve
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="hymba-1.5b")
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--gen", type=int, default=16)
+    args = p.parse_args()
+    out = serve(ServeConfig(arch=args.arch, batch=args.batch,
+                            prompt_len=16, gen=args.gen, max_len=64))
+    print("generated token ids (first sequence):",
+          list(map(int, out["tokens"][0])))
+
+
+if __name__ == "__main__":
+    main()

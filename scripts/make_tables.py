@@ -1,0 +1,95 @@
+"""Merge dry-run JSON outputs and emit the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python scripts/make_tables.py results/*.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+               "long_500k": 3}
+
+
+def load(paths):
+    cells = {}
+    for p in paths:
+        with open(p) as f:
+            for r in json.load(f):
+                key = (r["arch"], r["shape"], r["mesh"])
+                # Later files win (re-runs of fixed cells).
+                if key not in cells or r["status"] == "ok":
+                    cells[key] = r
+    return sorted(cells.values(),
+                  key=lambda r: (r["arch"], SHAPE_ORDER.get(r["shape"], 9),
+                                 r["mesh"]))
+
+
+def dryrun_table(cells):
+    rows = ["| arch | shape | mesh | status | GiB/chip (args) | fits 16G "
+            "| compile (s) | collective kinds |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in cells:
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"skipped¹ | — | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"FAILED | — | — | — | — |")
+            continue
+        gib = r["memory"]["per_chip_argument_bytes"] / 2 ** 30
+        coll = r["collective_bytes"]
+        kinds = ",".join(k.replace("all-", "a").replace("reduce-", "r")
+                         .replace("collective-", "c")
+                         for k, v in coll.items()
+                         if k != "total" and v > 0) or "none"
+        rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+                    f"{gib:.2f} | {'yes' if r.get('fits_hbm16') else 'NO'}"
+                    f" | {r['compile_s']:.0f} | {kinds} |")
+    return "\n".join(rows)
+
+
+def roofline_table(cells, mesh="16x16"):
+    rows = ["| arch | shape | compute (s) | memory (s) | collective (s) | "
+            "dominant | useful FLOPs ratio | roofline frac |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in cells:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"skipped¹ | — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | FAILED | | | | | |")
+            continue
+        rl = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.3e} "
+            f"| {rl['memory_s']:.3e} | {rl['collective_s']:.3e} "
+            f"| {rl['dominant'].replace('_s', '')} "
+            f"| {rl['useful_flops_ratio']:.3f} "
+            f"| {rl['roofline_fraction']:.4f} |")
+    return "\n".join(rows)
+
+
+def summary(cells):
+    ok = sum(1 for r in cells if r["status"] == "ok")
+    sk = sum(1 for r in cells if r["status"] == "skipped")
+    fail = sum(1 for r in cells if r["status"] not in ("ok", "skipped"))
+    return f"{ok} ok / {sk} skipped / {fail} failed / {len(cells)} cells"
+
+
+if __name__ == "__main__":
+    cells = load(sys.argv[1:])
+    print("## Summary:", summary(cells))
+    print()
+    print("### Dry-run table")
+    print(dryrun_table(cells))
+    print()
+    print("### Roofline table (single-pod 16x16)")
+    print(roofline_table(cells, "16x16"))
+    print()
+    print("### Roofline table (multi-pod 2x16x16)")
+    print(roofline_table(cells, "2x16x16"))

@@ -1,0 +1,75 @@
+"""Hillclimb profiler: lower one (arch x shape) cell and print the top
+HBM-traffic ops, top FLOPs dots and top collectives with while-multiplied
+weights — the dry-run stand-in for a wall-clock profile.
+
+    PYTHONPATH=src python scripts/profile_cell.py deepseek-moe-16b train_4k
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+import sys
+
+import jax  # noqa: E402
+
+from repro.configs import SHAPES, get_config  # noqa: E402
+from repro.launch.hlo_analysis import (HloCostModel, _OP_RE,  # noqa: E402
+                                       _shape_bytes)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import make_cell_plan  # noqa: E402
+
+
+def profile(arch: str, shape_name: str, top: int = 15, multi_pod=False):
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    with mesh:
+        plan = make_cell_plan(cfg, mesh, SHAPES[shape_name])
+        compiled = plan.step_fn.lower(*plan.args).compile()
+        hlo = compiled.as_text()
+    m = HloCostModel(hlo)
+    traffic, flops, colls = [], [], []
+    for comp, lines in m.comps.items():
+        mult = m.mult.get(comp, 0.0)
+        if mult <= 0:
+            continue
+        for line in lines:
+            mo = _OP_RE.match(line)
+            if not mo:
+                continue
+            name, out_type, op = mo.groups()
+            base = op.replace("-start", "")
+            meta = line.split("metadata=")[-1][:120] if "metadata=" in \
+                line else ""
+            if base in ("all-gather", "all-reduce", "reduce-scatter",
+                        "all-to-all", "collective-permute"):
+                colls.append((_shape_bytes(out_type) * mult, base,
+                              out_type[:48], meta))
+                continue
+            if op in ("tuple", "get-tuple-element", "bitcast", "parameter",
+                      "constant", "while", "iota", "partition-id"):
+                continue
+            if op == "fusion":
+                b = m._fusion_bytes(comp, line, out_type)
+            elif op in ("dynamic-slice", "gather", "slice"):
+                b = 2 * _shape_bytes(out_type)
+            elif op in ("dynamic-update-slice", "scatter"):
+                b = 0
+            else:
+                b = _shape_bytes(out_type) + m._operand_bytes(comp, line)
+            traffic.append((b * mult, op, out_type[:48], meta))
+            if op == "dot":
+                f = m._dot_flops(comp, line, out_type) * mult
+                flops.append((f, op, out_type[:48], meta))
+
+    for title, rows, unit in (("TOP HBM TRAFFIC", traffic, "B"),
+                              ("TOP DOT FLOPS", flops, "F"),
+                              ("TOP COLLECTIVES", colls, "B")):
+        rows.sort(reverse=True)
+        total = sum(r[0] for r in rows)
+        print(f"\n=== {title} (total {total:.3e} {unit}/chip) ===")
+        for r in rows[:top]:
+            print(f"  {r[0]:.3e}  {r[1]:<18} {r[2]:<50} {r[3][:90]}")
+
+
+if __name__ == "__main__":
+    profile(sys.argv[1], sys.argv[2],
+            multi_pod="--multi-pod" in sys.argv)

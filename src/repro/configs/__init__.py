@@ -1,0 +1,10 @@
+"""Architecture registry: `get_config(name)` / `list_configs()` expose the
+10 assigned architectures plus the paper's own experiment config."""
+from repro.configs.base import (ModelConfig, ShapeConfig, ALL_SHAPES,
+                                SHAPES, TRAIN_4K, PREFILL_32K, DECODE_32K,
+                                LONG_500K, get_config, list_configs,
+                                reduced_config, register)
+
+__all__ = ["ModelConfig", "ShapeConfig", "ALL_SHAPES", "SHAPES",
+           "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+           "get_config", "list_configs", "reduced_config", "register"]

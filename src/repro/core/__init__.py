@@ -1,0 +1,54 @@
+"""Parallel iterated extended & sigma-point Kalman smoothers (paper core).
+
+Public API:
+  * types: Gaussian, LinearizedSSM, FilteringElement, SmoothingElement,
+    StateSpaceModel
+  * sequential baselines: kalman_filter, rts_smoother, filter_smoother
+  * parallel-in-time: parallel_filter, parallel_smoother,
+    parallel_filter_smoother, filtering/smoothing elements + combines
+  * iterated drivers: ieks, ipls, iterated_smoother, IteratedConfig
+  * scan engine: associative_scan, sharded_associative_scan,
+    linear_recurrence_scan
+"""
+from .types import (Gaussian, LinearizedSSM, FilteringElement,
+                    SmoothingElement, StateSpaceModel, symmetrize,
+                    mvn_logpdf)
+from .sigma_points import cubature, unscented, gauss_hermite, get_scheme
+from .linearization import (linearize_taylor, linearize_slr,
+                            linearize_model_taylor, linearize_model_slr)
+from .sequential import kalman_filter, rts_smoother, filter_smoother
+from .parallel import (filtering_elements, smoothing_elements,
+                       filtering_combine, smoothing_combine,
+                       filtering_identity, smoothing_identity,
+                       parallel_filter, parallel_smoother,
+                       parallel_filter_smoother)
+from .iterated import (IteratedConfig, iterated_smoother, ieks, ipls,
+                       initial_trajectory)
+from .scan import (associative_scan, sharded_associative_scan,
+                   device_exclusive_scan, linear_recurrence_scan,
+                   linear_recurrence_combine, LinearRecurrenceElement)
+from .sqrt_parallel import (SqrtFilteringElement, SqrtSmoothingElement,
+                            sqrt_filtering_combine, sqrt_smoothing_combine,
+                            sqrt_parallel_filter, sqrt_parallel_smoother,
+                            sqrt_parallel_filter_smoother, tria)
+
+__all__ = [
+    "Gaussian", "LinearizedSSM", "FilteringElement", "SmoothingElement",
+    "StateSpaceModel", "symmetrize", "mvn_logpdf",
+    "cubature", "unscented", "gauss_hermite", "get_scheme",
+    "linearize_taylor", "linearize_slr", "linearize_model_taylor",
+    "linearize_model_slr",
+    "kalman_filter", "rts_smoother", "filter_smoother",
+    "filtering_elements", "smoothing_elements", "filtering_combine",
+    "smoothing_combine", "filtering_identity", "smoothing_identity",
+    "parallel_filter", "parallel_smoother", "parallel_filter_smoother",
+    "IteratedConfig", "iterated_smoother", "ieks", "ipls",
+    "initial_trajectory",
+    "associative_scan", "sharded_associative_scan", "device_exclusive_scan",
+    "linear_recurrence_scan", "linear_recurrence_combine",
+    "LinearRecurrenceElement",
+    "SqrtFilteringElement", "SqrtSmoothingElement",
+    "sqrt_filtering_combine", "sqrt_smoothing_combine",
+    "sqrt_parallel_filter", "sqrt_parallel_smoother",
+    "sqrt_parallel_filter_smoother", "tria",
+]

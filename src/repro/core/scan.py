@@ -1,0 +1,183 @@
+"""Associative-scan drivers: single-device Blelloch, Pallas combine dispatch,
+and the cross-device (sharded) scan.
+
+This module is the reusable engine behind three framework layers
+(DESIGN.md §2): the parallel Kalman filter/smoother (`repro.core.parallel`),
+SSM/mLSTM sequence mixing (`repro.models.ssm` / `repro.models.xlstm`), and
+sequence/context parallelism (`sharded_associative_scan`).
+
+Conventions: a *combine* takes ``(earlier, later)`` elements (time order)
+and returns their composition. ``jax.lax.associative_scan`` with
+``reverse=True`` feeds its operator ``(later_aggregate, earlier_element)``,
+so the driver swaps arguments for reverse scans — callers always write the
+combine in ``(earlier, later)`` form.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax import tree_util as jtu
+
+
+# ---------------------------------------------------------------------------
+# Single-device scan with combine-impl dispatch
+# ---------------------------------------------------------------------------
+
+def _batched_combine(combine: Callable, combine_impl: str) -> Callable:
+    """Return an operator over batched element pytrees."""
+    if combine_impl == "jnp":
+        return jax.vmap(combine)
+    if combine_impl == "pallas":
+        # Late import: kernels depend on core for their reference oracles.
+        from repro.kernels.kalman_combine import ops as kc_ops
+        return kc_ops.batched_combine_for(combine)
+    raise ValueError(f"unknown combine_impl {combine_impl!r}")
+
+
+def associative_scan(combine: Callable, elems, *, reverse: bool = False,
+                     combine_impl: str = "jnp",
+                     axis_name: Optional[str] = None,
+                     identity: Optional[Callable] = None):
+    """Inclusive associative scan over the leading (time) axis of ``elems``.
+
+    Args:
+      combine: pair combine in ``(earlier, later)`` order (unbatched).
+      reverse: suffix scan (e.g. smoothing) instead of prefix scan.
+      combine_impl: "jnp" (vmap) or "pallas" (TPU kernel / interpret).
+      axis_name: if set, run the cross-device sharded scan along this bound
+        mesh axis (caller must be inside `shard_map`); the time axis of
+        ``elems`` is the per-device shard.
+      identity: zero-arg callable producing the combine's identity element
+        (required for the sharded scan).
+    """
+    if axis_name is not None:
+        if identity is None:
+            raise ValueError("sharded scan requires an identity element")
+        return sharded_associative_scan(
+            combine, elems, axis_name=axis_name, identity=identity(),
+            reverse=reverse, combine_impl=combine_impl)
+    batched = _batched_combine(combine, combine_impl)
+    if reverse:
+        op = lambda later_agg, earlier: batched(earlier, later_agg)
+    else:
+        op = batched
+    return lax.associative_scan(op, elems, reverse=reverse)
+
+
+# ---------------------------------------------------------------------------
+# Cross-device scan (shard_map + ppermute) — beyond-paper distribution
+# ---------------------------------------------------------------------------
+
+def _tree_where(pred, a, b):
+    return jtu.tree_map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def device_exclusive_scan(combine: Callable, agg, *, axis_name: str,
+                          identity, reverse: bool = False):
+    """Exclusive scan of one element per device along ``axis_name``.
+
+    Hillis-Steele over the mesh axis: ``ceil(log2 D)`` ppermute rounds, one
+    final shift. ``agg`` is this device's aggregate element (no time axis).
+    """
+    D = lax.psum(1, axis_name)  # static for a bound mesh axis
+    idx = lax.axis_index(axis_name)
+    p = agg
+    shift = 1
+    while shift < D:
+        if not reverse:
+            # Bring the aggregate of the device `shift` to the left.
+            recv = lax.ppermute(p, axis_name,
+                                [(i, (i + shift) % D) for i in range(D)])
+            p = _tree_where(idx >= shift, combine(recv, p), p)
+        else:
+            recv = lax.ppermute(p, axis_name,
+                                [(i, (i - shift) % D) for i in range(D)])
+            p = _tree_where(idx < D - shift, combine(p, recv), p)
+        shift *= 2
+    if not reverse:
+        excl = lax.ppermute(p, axis_name, [(i, (i + 1) % D) for i in range(D)])
+        excl = _tree_where(idx == 0, identity, excl)
+    else:
+        excl = lax.ppermute(p, axis_name, [(i, (i - 1) % D) for i in range(D)])
+        excl = _tree_where(idx == D - 1, identity, excl)
+    return excl
+
+
+def sharded_associative_scan(combine: Callable, elems, *, axis_name: str,
+                             identity, reverse: bool = False,
+                             combine_impl: str = "jnp"):
+    """Distributed inclusive scan: local Blelloch scan + cross-device
+    exclusive scan of per-device aggregates + local fix-up.
+
+    Must be called inside `shard_map` with the time axis sharded along
+    ``axis_name``. This is the cluster-level form of the paper's method:
+    span O(log n_local + log D).
+    """
+    local = associative_scan(combine, elems, reverse=reverse,
+                             combine_impl=combine_impl)
+    take = (lambda x: x[0]) if reverse else (lambda x: x[-1])
+    agg = jtu.tree_map(take, local)
+    excl = device_exclusive_scan(combine, agg, axis_name=axis_name,
+                                 identity=identity, reverse=reverse)
+    if reverse:
+        fix = jax.vmap(lambda loc: combine(loc, excl))
+    else:
+        fix = jax.vmap(lambda loc: combine(excl, loc))
+    return fix(local)
+
+
+# ---------------------------------------------------------------------------
+# Diagonal linear recurrences (the deterministic special case used by SSMs)
+# ---------------------------------------------------------------------------
+
+class LinearRecurrenceElement(NamedTuple):
+    """Element of ``h_k = a_k * h_{k-1} + b_k`` (elementwise/diagonal)."""
+
+    a: jnp.ndarray
+    b: jnp.ndarray
+
+
+def linear_recurrence_combine(ei: LinearRecurrenceElement,
+                              ej: LinearRecurrenceElement
+                              ) -> LinearRecurrenceElement:
+    """Compose two diagonal affine maps, ``i`` earlier than ``j``.
+
+    This is the paper's smoothing combine (Eq. 19) with diagonal ``E`` and
+    the covariance dropped — the degenerate case powering SSM layers.
+    """
+    return LinearRecurrenceElement(a=ei.a * ej.a, b=ej.a * ei.b + ej.b)
+
+
+def linear_recurrence_scan(a: jnp.ndarray, b: jnp.ndarray, *,
+                           h0: Optional[jnp.ndarray] = None,
+                           axis_name: Optional[str] = None,
+                           combine_impl: str = "jnp") -> jnp.ndarray:
+    """All states of ``h_k = a_k * h_{k-1} + b_k`` along the leading axis.
+
+    ``a`` and ``b`` are ``[T, ...]``; optional initial state ``h0 [...]``
+    is folded into the first element. Returns ``h [T, ...]``.
+    """
+    if h0 is not None:
+        if axis_name is None:
+            b = b.at[0].set(a[0] * h0 + b[0])
+        else:
+            # Only the first device along the scan axis owns time step 0.
+            first = lax.axis_index(axis_name) == 0
+            b = b.at[0].set(jnp.where(first, a[0] * h0 + b[0], b[0]))
+    elems = LinearRecurrenceElement(a=a, b=b)
+    if combine_impl == "pallas" and axis_name is None:
+        from repro.kernels.ssm_scan import ops as ssm_ops
+        return ssm_ops.ssm_scan(a, b)
+    if axis_name is None:
+        # Elementwise combine is already batched; use it directly.
+        scanned = lax.associative_scan(linear_recurrence_combine, elems)
+    else:
+        ident = LinearRecurrenceElement(a=jnp.ones_like(a[0]),
+                                        b=jnp.zeros_like(b[0]))
+        scanned = sharded_associative_scan(
+            linear_recurrence_combine, elems, axis_name=axis_name,
+            identity=ident, combine_impl=combine_impl)
+    return scanned.b

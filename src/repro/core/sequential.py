@@ -1,0 +1,90 @@
+"""Sequential Kalman filter and RTS smoother over a linearized SSM.
+
+These are the paper's *sequential baselines* (span O(n), one `lax.scan`).
+They double as the oracle for the parallel formulations: for the same
+`LinearizedSSM` both must produce identical posteriors.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .types import Gaussian, LinearizedSSM, mvn_logpdf, symmetrize
+
+
+def kalman_filter(lin: LinearizedSSM, ys: jnp.ndarray, m0: jnp.ndarray,
+                  P0: jnp.ndarray, return_loglik: bool = False):
+    """Sequential (extended/SLR) Kalman filter.
+
+    Args:
+      lin: linearized model (leading dim n).
+      ys: measurements ``[n, ny]`` (row k-1 is ``y_k``).
+      m0, P0: prior on ``x_0``.
+
+    Returns:
+      Gaussian of filtered posteriors ``x_1..x_n`` (leading dim n);
+      optionally the total data log-likelihood under the linearized model.
+    """
+
+    def step(carry, inp):
+        m, P = carry
+        F, c, Qp, H, d, Rp, y = inp
+        # Predict.
+        m_pred = F @ m + c
+        P_pred = symmetrize(F @ P @ F.T + Qp)
+        # Update.
+        S = symmetrize(H @ P_pred @ H.T + Rp)
+        innov = y - (H @ m_pred + d)
+        K = jnp.linalg.solve(S, H @ P_pred).T
+        m_new = m_pred + K @ innov
+        P_new = symmetrize(P_pred - K @ S @ K.T)
+        ll = mvn_logpdf(y, H @ m_pred + d, S)
+        return (m_new, P_new), (m_new, P_new, ll)
+
+    (_, _), (ms, Ps, lls) = jax.lax.scan(
+        step, (m0, P0), (lin.F, lin.c, lin.Qp, lin.H, lin.d, lin.Rp, ys))
+    out = Gaussian(mean=ms, cov=Ps)
+    if return_loglik:
+        return out, jnp.sum(lls)
+    return out
+
+
+def rts_smoother(lin: LinearizedSSM, filtered: Gaussian, m0: jnp.ndarray,
+                 P0: jnp.ndarray) -> Gaussian:
+    """Sequential Rauch-Tung-Striebel smoother.
+
+    Returns smoothed posteriors for ``x_0..x_n`` (leading dim n+1); the
+    row-0 entry smooths the prior through the first transition.
+    """
+    n = filtered.mean.shape[0]
+    # Append the prior as the "time 0 filtered" state so one reverse scan
+    # covers x_0..x_{n-1}; transitions F[k] connect row k -> row k+1.
+    ms_f = jnp.concatenate([m0[None], filtered.mean[:-1]], axis=0)   # [n, nx] rows 0..n-1
+    Ps_f = jnp.concatenate([P0[None], filtered.cov[:-1]], axis=0)
+
+    def step(carry, inp):
+        m_next_s, P_next_s = carry
+        m_f, P_f, F, c, Qp = inp
+        m_pred = F @ m_f + c
+        P_pred = symmetrize(F @ P_f @ F.T + Qp)
+        G = jnp.linalg.solve(P_pred, F @ P_f).T  # P_f F^T P_pred^{-1}
+        m_s = m_f + G @ (m_next_s - m_pred)
+        P_s = symmetrize(P_f + G @ (P_next_s - P_pred) @ G.T)
+        return (m_s, P_s), (m_s, P_s)
+
+    init = (filtered.mean[-1], filtered.cov[-1])
+    (_, _), (ms_s, Ps_s) = jax.lax.scan(
+        step, init, (ms_f, Ps_f, lin.F, lin.c, lin.Qp), reverse=True)
+    mean = jnp.concatenate([ms_s, filtered.mean[-1:]], axis=0)
+    cov = jnp.concatenate([Ps_s, filtered.cov[-1:]], axis=0)
+    return Gaussian(mean=mean, cov=cov)
+
+
+def filter_smoother(lin: LinearizedSSM, ys: jnp.ndarray, m0: jnp.ndarray,
+                    P0: jnp.ndarray) -> Tuple[Gaussian, Gaussian]:
+    """One sequential filtering+smoothing pass. Smoothed has leading n+1."""
+    filtered = kalman_filter(lin, ys, m0, P0)
+    smoothed = rts_smoother(lin, filtered, m0, P0)
+    return filtered, smoothed

@@ -1,0 +1,99 @@
+"""Sigma-point schemes for statistical linear regression (paper Eq. 7-9).
+
+Each scheme maps a Gaussian ``N(m, P)`` to points ``X [m_pts, nx]`` and
+weights ``w [m_pts]`` such that moment-matched expectations are weighted
+sums over transformed points. The paper's experiments use the cubature rule
+(spherical-radial, 2*nx points); unscented and Gauss-Hermite are provided
+for completeness of the IPLS family.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from .types import symmetrize
+
+
+def _safe_cholesky(P: jnp.ndarray, jitter: float = 0.0) -> jnp.ndarray:
+    if jitter:
+        P = P + jitter * jnp.eye(P.shape[-1], dtype=P.dtype)
+    return jnp.linalg.cholesky(symmetrize(P))
+
+
+@dataclasses.dataclass(frozen=True)
+class SigmaScheme:
+    """Unit sigma points ``xi [m_pts, nx]`` and weights ``wm, wc [m_pts]``.
+
+    Points for ``N(m, P)`` are ``m + chol(P) @ xi_j``.
+    """
+
+    xi: np.ndarray
+    wm: np.ndarray
+    wc: np.ndarray
+
+    @property
+    def num_points(self) -> int:
+        return self.xi.shape[0]
+
+    def points(self, m: jnp.ndarray, P: jnp.ndarray, jitter: float = 0.0
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        chol = _safe_cholesky(P, jitter)
+        xi = jnp.asarray(self.xi, dtype=m.dtype)
+        pts = m[None, :] + (chol @ xi.T).T  # [m_pts, nx]
+        return pts, jnp.asarray(self.wm, m.dtype), jnp.asarray(self.wc, m.dtype)
+
+
+def cubature(nx: int) -> SigmaScheme:
+    """Third-degree spherical-radial cubature rule: 2*nx points (paper §5)."""
+    s = np.sqrt(float(nx))
+    xi = np.concatenate([s * np.eye(nx), -s * np.eye(nx)], axis=0)
+    w = np.full((2 * nx,), 1.0 / (2 * nx))
+    return SigmaScheme(xi=xi, wm=w, wc=w)
+
+
+def unscented(nx: int, alpha: float = 1.0, beta: float = 0.0,
+              kappa: float = None) -> SigmaScheme:
+    """Standard UKF points: 2*nx + 1 points."""
+    if kappa is None:
+        kappa = 3.0 - nx
+    lam = alpha * alpha * (nx + kappa) - nx
+    s = np.sqrt(nx + lam)
+    xi = np.concatenate([np.zeros((1, nx)), s * np.eye(nx), -s * np.eye(nx)], axis=0)
+    wm = np.full((2 * nx + 1,), 1.0 / (2.0 * (nx + lam)))
+    wc = wm.copy()
+    wm[0] = lam / (nx + lam)
+    wc[0] = lam / (nx + lam) + (1.0 - alpha * alpha + beta)
+    return SigmaScheme(xi=xi, wm=wm, wc=wc)
+
+
+def gauss_hermite(nx: int, order: int = 3) -> SigmaScheme:
+    """Gauss-Hermite product rule: ``order**nx`` points (small nx only)."""
+    pts1, w1 = np.polynomial.hermite_e.hermegauss(order)
+    w1 = w1 / np.sqrt(2.0 * np.pi)  # probabilists' normalization
+    # hermegauss is w.r.t. exp(-x^2/2); weights sum to sqrt(2 pi).
+    w1 = w1 / w1.sum()
+    grids = np.meshgrid(*([pts1] * nx), indexing="ij")
+    xi = np.stack([g.reshape(-1) for g in grids], axis=-1)
+    wgrids = np.meshgrid(*([w1] * nx), indexing="ij")
+    w = np.ones(xi.shape[0])
+    for g in wgrids:
+        w = w * g.reshape(-1)
+    return SigmaScheme(xi=xi, wm=w, wc=w)
+
+
+SCHEMES = {
+    "cubature": cubature,
+    "unscented": unscented,
+    "gauss_hermite": gauss_hermite,
+}
+
+
+def get_scheme(name: str, nx: int, **kwargs) -> SigmaScheme:
+    try:
+        return SCHEMES[name](nx, **kwargs)
+    except KeyError as e:
+        raise ValueError(f"unknown sigma-point scheme {name!r}; "
+                         f"available: {sorted(SCHEMES)}") from e

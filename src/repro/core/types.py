@@ -1,0 +1,112 @@
+"""Core pytree types for the parallel iterated Kalman smoothers.
+
+Conventions (see DESIGN.md §10):
+  * ``n`` measurements ``y_{1:n}``; states ``x_{0:n}``.
+  * Transition params ``F_k, c_k, Lambda_k`` map ``x_k -> x_{k+1}`` and are
+    stored for ``k = 0..n-1`` (leading dim ``n``).
+  * Measurement params ``H_k, d_k, Omega_k`` are for ``y_k`` at ``x_k``,
+    ``k = 1..n``, stored 0-based (leading dim ``n``).
+  * Filtering outputs have leading dim ``n`` (posteriors of ``x_1..x_n``).
+  * Smoothing outputs have leading dim ``n+1`` (``x_0..x_n``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax.numpy as jnp
+
+
+class Gaussian(NamedTuple):
+    """A (batched) Gaussian ``N(mean, cov)``."""
+
+    mean: jnp.ndarray  # [..., nx]
+    cov: jnp.ndarray   # [..., nx, nx]
+
+
+class LinearizedSSM(NamedTuple):
+    """Affine-Gaussian approximation of the model over a full trajectory.
+
+    ``p(x_{k+1}|x_k) ~= N(F[k] x_k + c[k], Qp[k])`` for ``k = 0..n-1`` and
+    ``p(y_k|x_k) ~= N(H[k-1] x_k + d[k-1], Rp[k-1])`` for ``k = 1..n``,
+    where ``Qp = Q + Lambda`` and ``Rp = R + Omega`` (paper Eq. 11).
+    """
+
+    F: jnp.ndarray   # [n, nx, nx]
+    c: jnp.ndarray   # [n, nx]
+    Qp: jnp.ndarray  # [n, nx, nx]
+    H: jnp.ndarray   # [n, ny, nx]
+    d: jnp.ndarray   # [n, ny]
+    Rp: jnp.ndarray  # [n, ny, ny]
+
+
+class FilteringElement(NamedTuple):
+    """Parallel filtering element ``a_k = (A, b, C, eta, J)`` (paper Eq. 13-14)."""
+
+    A: jnp.ndarray    # [..., nx, nx]
+    b: jnp.ndarray    # [..., nx]
+    C: jnp.ndarray    # [..., nx, nx]
+    eta: jnp.ndarray  # [..., nx]
+    J: jnp.ndarray    # [..., nx, nx]
+
+
+class SmoothingElement(NamedTuple):
+    """Parallel smoothing element ``a_k = (E, g, L)`` (paper Eq. 17-18)."""
+
+    E: jnp.ndarray  # [..., nx, nx]
+    g: jnp.ndarray  # [..., nx]
+    L: jnp.ndarray  # [..., nx, nx]
+
+
+@dataclasses.dataclass(frozen=True)
+class StateSpaceModel:
+    """Nonlinear additive-Gaussian state-space model (paper Eq. 4).
+
+    ``x_k = f(x_{k-1}) + q``, ``q ~ N(0, Q)``;
+    ``y_k = h(x_k) + r``,     ``r ~ N(0, R)``;
+    ``x_0 ~ N(m0, P0)``.
+
+    ``f``/``h`` act on a single (unbatched) state vector; time-varying
+    models can close over ``k`` by passing stacked ``Q``/``R`` with leading
+    dim ``n`` (otherwise they are broadcast).
+    """
+
+    f: Callable[[jnp.ndarray], jnp.ndarray]
+    h: Callable[[jnp.ndarray], jnp.ndarray]
+    Q: jnp.ndarray
+    R: jnp.ndarray
+    m0: jnp.ndarray
+    P0: jnp.ndarray
+
+    @property
+    def nx(self) -> int:
+        return self.m0.shape[-1]
+
+    @property
+    def ny(self) -> int:
+        return self.R.shape[-1]
+
+
+def broadcast_noise(M: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Broadcast a single covariance to a stacked ``[n, d, d]`` array."""
+    M = jnp.asarray(M)
+    if M.ndim == 2:
+        return jnp.broadcast_to(M, (n,) + M.shape)
+    if M.shape[0] != n:
+        raise ValueError(f"noise stack has length {M.shape[0]}, expected {n}")
+    return M
+
+
+def symmetrize(M: jnp.ndarray) -> jnp.ndarray:
+    return 0.5 * (M + jnp.swapaxes(M, -1, -2))
+
+
+def mvn_logpdf(x: jnp.ndarray, mean: jnp.ndarray, cov: jnp.ndarray) -> jnp.ndarray:
+    """Log-density of ``N(x; mean, cov)`` (used for data log-likelihood)."""
+    d = x.shape[-1]
+    chol = jnp.linalg.cholesky(cov)
+    diff = x - mean
+    z = jnp.linalg.solve(chol, diff[..., None])[..., 0]
+    quad = jnp.sum(z * z, axis=-1)
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(chol, axis1=-2, axis2=-1)), axis=-1)
+    return -0.5 * (quad + logdet + d * jnp.log(2.0 * jnp.pi))

@@ -1,0 +1,6 @@
+"""Data substrates: state-estimation simulators and the LM token pipeline."""
+from .tracking import (CoordinatedTurnConfig, make_coordinated_turn_model,
+                       simulate_trajectory)
+
+__all__ = ["CoordinatedTurnConfig", "make_coordinated_turn_model",
+           "simulate_trajectory"]

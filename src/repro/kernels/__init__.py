@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel package ships three modules:
+  * ``<name>.py`` — the ``pl.pallas_call`` kernel with explicit BlockSpec
+    VMEM tiling (TPU is the *target*; on CPU they run in interpret mode);
+  * ``ops.py``   — the jit'd public wrapper (padding, dispatch, fallbacks);
+  * ``ref.py``   — the pure-jnp oracle used by the allclose test sweeps.
+
+Kernels:
+  * ``kalman_combine`` — fused batched associative combines (paper Eq. 15 /
+    Eq. 19), the hot op of the parallel smoother scan.
+  * ``ssm_scan``       — chunked diagonal linear-recurrence scan (the
+    deterministic special case powering SSM/mLSTM layers).
+  * ``flash_attention``— blocked causal attention with online softmax.
+"""

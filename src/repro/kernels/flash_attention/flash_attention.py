@@ -1,0 +1,120 @@
+"""Blocked causal attention with online softmax (Flash-style) for TPU.
+
+Schedule: grid = (batch, q-heads, q-blocks, k-blocks) with the k-block dim
+innermost/sequential; VMEM scratch carries the running (max, denominator,
+accumulator) across k-blocks. The two matmuls per step are 2-D
+``[BQ, Dh] @ [Dh, BK]`` and ``[BQ, BK] @ [BK, Dh]`` — both MXU-shaped when
+BQ/BK/Dh are multiples of 128 (head_dim 64 still runs, at half MXU width).
+
+GQA is handled in the BlockSpec index map: k/v blocks are fetched from
+``kv_head = q_head // (Hq // Hkv)``, so no KV duplication is materialized.
+
+Numerical notes: accumulation is f32 regardless of input dtype; masked
+lanes use -1e30 (not -inf) so fully-masked *padding* rows produce 0/1
+rather than NaN.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 scale: float, causal: bool, kv_len: int, q_offset: int,
+                 block_q: int, block_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)   # [BQ, Dh]
+    k = k_ref[0, 0].astype(jnp.float32)   # [BK, Dh]
+    v = v_ref[0, 0].astype(jnp.float32)   # [BK, Dh]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    # Mask: key padding (kpos >= kv_len) and causality (q_pos < k_pos).
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = kpos < kv_len
+    if causal:
+        qpos = (q_offset + qi * block_q
+                + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0))
+        mask = jnp.logical_and(mask, qpos >= kpos)
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[...]                     # [BQ, 1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                  # [BQ, BK]
+    alpha = jnp.exp(m_prev - m_new)         # [BQ, 1]
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _():
+        l = l_ref[...]
+        safe_l = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0] = (acc_ref[...] / safe_l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_k", "interpret"))
+def flash_attention_batched(q, k, v, *, causal: bool = True,
+                            scale: float = None, block_q: int = 128,
+                            block_k: int = 128, interpret: bool = True):
+    """``q [B, Hq, Tq, Dh]``, ``k/v [B, Hkv, Tk, Dh]`` -> ``[B, Hq, Tq, Dh]``.
+
+    For decode (Tq < Tk) queries are assumed right-aligned with the keys
+    (query i sits at absolute position ``Tk - Tq + i``).
+    """
+    B, Hq, Tq, Dh = q.shape
+    _, Hkv, Tk, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (Dh ** 0.5)
+    bq = min(block_q, Tq)
+    bk = min(block_k, Tk)
+    pq, pk = (-Tq) % bq, (-Tk) % bk
+    q_p = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    k_p = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    v_p = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    grid = (B, Hq, (Tq + pq) // bq, (Tk + pk) // bk)
+
+    q_spec = pl.BlockSpec((1, 1, bq, Dh), lambda b, h, i, j: (b, h, i, 0))
+    kv_spec = pl.BlockSpec((1, 1, bk, Dh),
+                           lambda b, h, i, j: (b, h // group, j, 0))
+    o_spec = pl.BlockSpec((1, 1, bq, Dh), lambda b, h, i, j: (b, h, i, 0))
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, kv_len=Tk,
+        q_offset=Tk - Tq, block_q=bq, block_k=bk)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct(q_p.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, Dh), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_p, k_p, v_p)
+    return out[:, :, :Tq, :]

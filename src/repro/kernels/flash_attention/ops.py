@@ -1,0 +1,22 @@
+"""Public wrapper for the flash attention kernel: backend dispatch and a
+pure-jnp chunked fallback used by model code on CPU (dry-run lowering)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .flash_attention import flash_attention_batched
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale: float = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return flash_attention_batched(q, k, v, causal=causal, scale=scale,
+                                   block_q=block_q, block_k=block_k,
+                                   interpret=interpret)
+
+
+attention_ref = _ref.attention_ref

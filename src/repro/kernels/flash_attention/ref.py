@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for flash_attention: materialized-scores softmax
+attention with GQA broadcast and causal masking, f32 accumulation."""
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale: float = None):
+    """``q [B, Hq, Tq, Dh]``, ``k/v [B, Hkv, Tk, Dh]`` -> ``[B, Hq, Tq, Dh]``.
+
+    Decode convention matches the kernel: queries right-aligned with keys.
+    """
+    B, Hq, Tq, Dh = q.shape
+    _, Hkv, Tk, _ = k.shape
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (Dh ** 0.5)
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        qpos = (Tk - Tq) + jnp.arange(Tq)[:, None]
+        kpos = jnp.arange(Tk)[None, :]
+        s = jnp.where(qpos >= kpos, s, _NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,51 @@
+"""Public jit'd wrappers for the fused Kalman combine kernels.
+
+Dispatch policy:
+  * TPU backend -> compiled Pallas (Mosaic) kernel;
+  * other backends -> the same kernel in interpret mode for small batches,
+    or the jnp reference for tiny inputs where kernel overhead dominates.
+
+`batched_combine_for` adapts a *scalar* core combine (as passed to
+`repro.core.scan.associative_scan`) to its fused batched kernel — this is
+the hook `combine_impl="pallas"` uses.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.parallel import filtering_combine, smoothing_combine
+
+from . import kalman_combine as _k
+from . import ref as _ref
+
+_MIN_KERNEL_BATCH = 8
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def filtering_combine_op(ei, ej, *, tile: int = 512):
+    B = ei.b.shape[0]
+    if B < _MIN_KERNEL_BATCH:
+        return _ref.filtering_combine_batched_ref(ei, ej)
+    return _k.filtering_combine_batched(ei, ej, tile=tile,
+                                        interpret=_use_interpret())
+
+
+def smoothing_combine_op(ei, ej, *, tile: int = 512):
+    B = ei.g.shape[0]
+    if B < _MIN_KERNEL_BATCH:
+        return _ref.smoothing_combine_batched_ref(ei, ej)
+    return _k.smoothing_combine_batched(ei, ej, tile=tile,
+                                        interpret=_use_interpret())
+
+
+def batched_combine_for(combine):
+    """Map a core combine fn to its fused batched kernel."""
+    if combine is filtering_combine:
+        return filtering_combine_op
+    if combine is smoothing_combine:
+        return smoothing_combine_op
+    # Unknown combine: fall back to vmap (e.g. user-supplied operators).
+    return jax.vmap(combine)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the kalman_combine kernels: the (vmapped) textbook
+combines from `repro.core.parallel` — the exact code the paper describes."""
+import jax
+
+from repro.core.parallel import filtering_combine, smoothing_combine
+
+
+def filtering_combine_batched_ref(ei, ej):
+    return jax.vmap(filtering_combine)(ei, ej)
+
+
+def smoothing_combine_batched_ref(ei, ej):
+    return jax.vmap(smoothing_combine)(ei, ej)

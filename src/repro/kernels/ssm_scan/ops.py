@@ -1,0 +1,34 @@
+"""Public wrapper for the chunked SSM scan kernel.
+
+Accepts ``[T, D]`` or ``[B, T, D]`` inputs, folds an optional initial
+state into the first step, and dispatches: Mosaic on TPU, interpret mode
+elsewhere; tiny sequences fall through to the `lax.scan` reference (the
+kernel's chunking overhead is not worth it below one chunk).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .ssm_scan import ssm_scan_batched
+
+
+def ssm_scan(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray = None, *,
+             chunk: int = 128, d_block: int = 512,
+             interpret: bool = None) -> jnp.ndarray:
+    squeeze = a.ndim == 2
+    if squeeze:
+        a, b = a[None], b[None]
+        if h0 is not None:
+            h0 = h0[None]
+    if h0 is not None:
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if a.shape[1] <= chunk and interpret:
+        out = _ref.ssm_scan_ref(a, b)
+    else:
+        out = ssm_scan_batched(a, b, chunk=chunk, d_block=d_block,
+                               interpret=interpret)
+    return out[0] if squeeze else out

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for ssm_scan: a sequential `lax.scan` over time."""
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray = None
+                 ) -> jnp.ndarray:
+    """``a, b [B, T, D]`` -> all states ``h [B, T, D]`` (h0 default 0)."""
+    B, T, D = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, D), a.dtype)
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0, (jnp.moveaxis(a, 1, 0),
+                                    jnp.moveaxis(b, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1)

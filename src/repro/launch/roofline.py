@@ -1,0 +1,91 @@
+"""Roofline analysis (task spec deliverable (g)).
+
+Three terms per (arch x shape x mesh), derived from the compiled dry-run
+via `repro.launch.hlo_analysis` (exact per-chip FLOPs / HBM traffic /
+collective bytes, with while-loop trip counts applied — see that module
+for why raw ``cost_analysis()`` under-counts scanned models):
+
+  compute_term    = FLOPs_per_chip / 197e12            [bf16 MXU peak]
+  memory_term     = HBM_bytes_per_chip / 819e9         [HBM bandwidth]
+  collective_term = collective bytes_per_chip / 50e9   [ICI]
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) for train; 2*N*D for
+single forward (prefill); 2*N*B for one decode step. The ratio
+MODEL_FLOPS / HLO_FLOPs shows how much compiled compute is "useful"
+(catches remat/redundancy waste; remat'd train is expected ~0.7x, causal
+block-skipping and padded-head waste show up here too).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.hlo_analysis import analyze_hlo  # noqa: F401 (re-export)
+
+PEAK_FLOPS = 197e12     # bf16 / chip (TPU v5e-class target)
+HBM_BW = 819e9          # bytes/s per chip
+ICI_BW = 50e9           # bytes/s per link per chip
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def roofline_report(cfg: ModelConfig, shape: ShapeConfig, cell: dict
+                    ) -> dict:
+    """``cell`` carries per-chip 'flops', 'hbm_bytes', 'collective_bytes'
+    from `analyze_hlo` plus 'chips'."""
+    chips = cell["chips"]
+    compute_term = cell["flops"] / PEAK_FLOPS
+    memory_term = cell["hbm_bytes"] / HBM_BW
+    collective_term = cell["collective_bytes"]["total"] / ICI_BW
+    terms = {"compute_s": compute_term, "memory_s": memory_term,
+             "collective_s": collective_term}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    step_time = max(terms.values())
+    # Roofline fraction: useful-FLOPs rate vs peak, if the step ran at the
+    # dominant-term bound (the CPU-container stand-in for measured MFU).
+    frac = (mf / chips / PEAK_FLOPS) / step_time if step_time > 0 else 0.0
+    total_hlo_flops = cell["flops"] * chips
+    return {
+        **{k: float(f"{v:.6g}") for k, v in terms.items()},
+        "dominant": dominant,
+        "model_flops": float(f"{mf:.6g}"),
+        "useful_flops_ratio": float(f"{(mf / total_hlo_flops):.4g}")
+        if total_hlo_flops else 0.0,
+        "roofline_fraction": float(f"{frac:.4g}"),
+    }
+
+
+def format_table(results: list) -> str:
+    """EXPERIMENTS.md-ready markdown table."""
+    hdr = ("| arch | shape | mesh | compute (s) | memory (s) | "
+           "collective (s) | dominant | useful FLOPs | roofline frac |")
+    sep = "|" + "---|" * 9
+    rows = [hdr, sep]
+    for r in results:
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"— | — | — | skipped | — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"FAILED | | | | | |")
+            continue
+        rl = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rl['compute_s']:.3e} | {rl['memory_s']:.3e} "
+            f"| {rl['collective_s']:.3e} | {rl['dominant'].split('_')[0]} "
+            f"| {rl['useful_flops_ratio']:.3f} "
+            f"| {rl['roofline_fraction']:.3f} |")
+    return "\n".join(rows)

@@ -1,0 +1,92 @@
+"""Serving driver: batched prefill + decode loop with KV/SSM caches.
+
+    python -m repro.launch.serve --arch qwen2-1.5b --batch 4 \
+        --prompt-len 32 --gen 16 [--mesh 1x1]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced_config
+from repro.models import (decode_step, encode, init_caches, init_model)
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    arch: str
+    batch: int = 4
+    prompt_len: int = 32
+    gen: int = 16
+    max_len: int = 128
+    reduced: bool = True
+    seed: int = 0
+    greedy: bool = True
+    temperature: float = 1.0
+
+
+def serve(serve_cfg: ServeConfig, emit=print) -> dict:
+    cfg = get_config(serve_cfg.arch)
+    if serve_cfg.reduced:
+        cfg = reduced_config(cfg)
+    params, _ = init_model(cfg, jax.random.PRNGKey(serve_cfg.seed))
+    B = serve_cfg.batch
+    key = jax.random.PRNGKey(serve_cfg.seed + 1)
+    prompts = jax.random.randint(key, (B, serve_cfg.prompt_len), 0,
+                                 cfg.vocab_size)
+    memory = None
+    if cfg.encoder_layers:
+        memory = encode(params, cfg, jnp.zeros(
+            (B, cfg.encoder_seq_len, cfg.d_model), jnp.float32))
+
+    caches = init_caches(cfg, B, serve_cfg.max_len)
+
+    @jax.jit
+    def dstep(caches, tok, pos):
+        return decode_step(params, cfg, caches, tok, pos, memory=memory)
+
+    # Prompt processing via teacher-forced decode (exercises the cache
+    # path end-to-end; a production server would use the prefill graph).
+    t0 = time.perf_counter()
+    logits = None
+    for i in range(serve_cfg.prompt_len):
+        logits, caches = dstep(caches, prompts[:, i:i + 1],
+                               jnp.asarray(i, jnp.int32))
+    generated = []
+    tok = jnp.argmax(logits[:, :, :cfg.vocab_size], axis=-1) \
+        .astype(jnp.int32)
+    for j in range(serve_cfg.gen):
+        generated.append(tok)
+        logits, caches = dstep(
+            caches, tok, jnp.asarray(serve_cfg.prompt_len + j, jnp.int32))
+        tok = jnp.argmax(logits[:, :, :cfg.vocab_size], axis=-1) \
+            .astype(jnp.int32)
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+    out_tokens = jnp.concatenate(generated, axis=1)
+    total = serve_cfg.prompt_len + serve_cfg.gen
+    emit(f"[serve] {B} seqs x {total} steps in {dt:.2f}s "
+         f"({B * total / dt:.1f} tok/s)")
+    return {"tokens": out_tokens, "tok_per_s": B * total / dt}
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=32)
+    p.add_argument("--gen", type=int, default=16)
+    p.add_argument("--reduced", action="store_true", default=True)
+    args = p.parse_args(argv)
+    serve(ServeConfig(arch=args.arch, batch=args.batch,
+                      prompt_len=args.prompt_len, gen=args.gen,
+                      reduced=args.reduced))
+
+
+if __name__ == "__main__":
+    main()

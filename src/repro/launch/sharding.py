@@ -1,0 +1,113 @@
+"""Sharding-rule plumbing (DESIGN.md §6): spec adaptation across meshes,
+FSDP widening for very large archs, ZeRO moment widening, and the
+per-(arch x shape) input/state sharding tables used by the dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _map_entry(e, mapping):
+    if e is None:
+        return None
+    if isinstance(e, str):
+        return mapping.get(e, e)
+    if "pod" in e:
+        return e  # already multi-pod aware; don't re-map 'data'
+    return tuple(x for part in e for x in (
+        mapping.get(part, part) if isinstance(mapping.get(part, part),
+                                              tuple)
+        else (mapping.get(part, part),)))
+
+
+def adapt_specs_for_mesh(specs: Any, mesh: Mesh) -> Any:
+    """Make single-pod specs portable: on a multi-pod mesh, 'data' means
+    the combined ('pod', 'data') axes (pure DP over pods)."""
+    if "pod" not in mesh.axis_names:
+        return specs
+    mapping = {"data": ("pod", "data")}
+
+    def fix(spec: P) -> P:
+        return P(*[_map_entry(e, mapping) for e in spec])
+
+    return jax.tree_util.tree_map(fix, specs,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def fsdp_widen(specs: Any, shapes: Any, data_size: int = 16) -> Any:
+    """FSDP: additionally shard the largest divisible unsharded dim of
+    every >=2-D weight over 'data' (used for the ~70B+ archs in train,
+    where 1-D TP-sharded params + grads exceed HBM; DESIGN.md §6)."""
+
+    def widen(spec: P, like) -> P:
+        shape = like.shape
+        if len(shape) < 2:
+            return spec
+        used = set(a for e in spec if e is not None
+                   for a in ((e,) if isinstance(e, str) else e))
+        if "data" in used:
+            return spec
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        best, best_dim = 0, -1
+        for i, (e, dim) in enumerate(zip(entries, shape)):
+            if e is None and dim % data_size == 0 and dim > best:
+                best, best_dim = dim, i
+        if best_dim >= 0:
+            entries[best_dim] = "data"
+        return P(*entries)
+
+    return jax.tree_util.tree_map(widen, specs, shapes,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def named(mesh: Mesh, specs: Any) -> Any:
+    """PartitionSpec pytree -> NamedSharding pytree (mesh-adapted)."""
+    specs = adapt_specs_for_mesh(specs, mesh)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def eval_shapes_init(cfg: ModelConfig):
+    """Abstract (no-allocation) param shapes + specs via eval_shape."""
+    from repro.models import init_model
+
+    def init_fn():
+        params, _ = init_model(cfg, jax.random.PRNGKey(0))
+        return params
+
+    shapes = jax.eval_shape(init_fn)
+    _, specs = _specs_only(cfg)
+    return shapes, specs
+
+
+def _specs_only(cfg: ModelConfig):
+    """init_model returns (params, specs); get specs without allocating by
+    running init under eval_shape and capturing specs structurally."""
+    from repro.models import init_model
+    captured = {}
+
+    def init_fn():
+        params, specs = init_model(cfg, jax.random.PRNGKey(0))
+        captured["specs"] = specs
+        return params
+
+    shapes = jax.eval_shape(init_fn)
+    return shapes, captured["specs"]
+
+
+def train_batch_specs(cfg: ModelConfig, batch_axis=("data",)):
+    specs = {"tokens": P(batch_axis, None), "labels": P(batch_axis, None)}
+    if cfg.encoder_layers:
+        specs["enc_emb"] = P(batch_axis, None, None)
+    return specs
+
+
+def residual_spec(batch_axis=("data",), seq_axis="model"):
+    """Megatron-style sequence-parallel residual stream (train path)."""
+    return P(batch_axis, seq_axis, None)

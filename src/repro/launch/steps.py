@@ -1,0 +1,249 @@
+"""Step factories: build the jitted train / prefill / decode steps with
+their full sharding tables for a given (arch x shape x mesh) cell — the
+single source of truth used by the dry-run, the trainer and the server.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch import sharding as shard_lib
+from repro.launch.mesh import batch_axes
+from repro.models import cache_specs as model_cache_specs
+from repro.models import decode_step as model_decode_step
+from repro.models import prefill as model_prefill
+from repro.models import train_loss
+from repro.models.layers import dtype_of
+from repro.optim import (AdamWConfig, AdamWState, adamw_update, init_adamw,
+                         warmup_cosine, zero_specs)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+@dataclasses.dataclass
+class CellPlan:
+    """Everything needed to lower one (arch x shape x mesh) cell."""
+    cfg: ModelConfig
+    shape: ShapeConfig
+    mesh: Mesh
+    step_fn: Any                  # jitted function
+    args: Tuple                   # ShapeDtypeStruct args
+    kwargs: Dict[str, Any]
+    description: str
+    in_shardings: Tuple = ()      # NamedSharding pytrees matching args
+
+    def per_chip_argument_bytes(self) -> int:
+        """Exact resident bytes/chip of the step's inputs (weights, opt
+        state, caches, batch) — the 'does it fit' number."""
+        import numpy as np
+        total = 0
+        flat_a = jax.tree_util.tree_leaves(self.args)
+        flat_s = jax.tree_util.tree_leaves(
+            self.in_shardings,
+            is_leaf=lambda x: isinstance(x, NamedSharding))
+        for a, s in zip(flat_a, flat_s):
+            shard = s.shard_shape(a.shape) if isinstance(
+                s, NamedSharding) else a.shape
+            total += int(np.prod(shard)) * a.dtype.itemsize
+        return total
+
+
+# ---------------------------------------------------------------------------
+# Sharding tables
+# ---------------------------------------------------------------------------
+
+def param_and_state_specs(cfg: ModelConfig, mesh: Mesh, *,
+                          for_train: bool):
+    shapes, specs = shard_lib._specs_only(cfg)
+    # 'data' means the combined ('pod','data') axes on a multi-pod mesh —
+    # divisibility checks must use the folded size.
+    data_size = mesh.shape["data"] * mesh.shape.get("pod", 1)
+    if for_train and cfg.fsdp_params:
+        specs = shard_lib.fsdp_widen(specs, shapes, data_size=data_size)
+    if not for_train:
+        return shapes, specs, None, None
+    opt_shapes = jax.eval_shape(lambda: init_adamw_abstract(shapes))
+    mesh_sizes = dict(mesh.shape)
+    mesh_sizes["data"] = data_size
+    opt_specs = zero_specs(specs, mesh_sizes, shapes)
+    return shapes, specs, opt_shapes, opt_specs
+
+
+def init_adamw_abstract(param_shapes):
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), param_shapes)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree_util.tree_map(jnp.copy, zeros))
+
+
+def _cache_shapes_and_specs(cfg: ModelConfig, B: int, S: int, mesh: Mesh):
+    """Decode caches: shapes via eval_shape; shardings with the DESIGN §6
+    decode rules — shard KV heads over 'model' when divisible, otherwise
+    shard the cache *sequence* dim over 'model' (keeps grok/qwen2-vl-scale
+    caches resident); batch over 'data' when it divides."""
+    from repro.models import init_caches
+    shapes = jax.eval_shape(lambda: init_caches(cfg, B, S))
+    dsize = mesh.shape["data"]
+    b_axis = ("data",) if B % dsize == 0 and B >= dsize else None
+    specs = model_cache_specs(cfg, batch_spec=b_axis)
+
+    if not cfg.shard_kv_heads:
+        def fix_kv(spec: P, like) -> P:
+            # KV caches are rank-5 here ([layers, B, Hkv, S, Dh]).
+            if len(like.shape) == 5 and like.shape[3] == S and S >= 16:
+                entries = list(spec) + [None] * (5 - len(spec))
+                if entries[2] in ("model",):
+                    entries[2] = None
+                entries[3] = "model"
+                return P(*entries)
+            return spec
+        specs = jax.tree_util.tree_map(
+            fix_kv, specs, shapes, is_leaf=lambda x: isinstance(x, P))
+    return shapes, specs
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                    opt_cfg: AdamWConfig = AdamWConfig(),
+                    total_steps: int = 100_000,
+                    warmup_steps: int = 2000,
+                    sequence_parallel: bool = True) -> CellPlan:
+    b_axis = batch_axes(mesh)
+    res_spec = None
+    if sequence_parallel and shape.seq_len % mesh.shape["model"] == 0:
+        res_spec = NamedSharding(
+            mesh, P(b_axis, "model", None))
+
+    def step(state: TrainState, batch):
+        def loss_fn(p):
+            return train_loss(p, cfg, batch, residual_spec=res_spec)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn,
+                                                    has_aux=True)(
+            state.params)
+        lr_scale = warmup_cosine(state.opt.step, warmup_steps=warmup_steps,
+                                 total_steps=total_steps)
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, state.params, grads, state.opt, lr_scale)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return TrainState(params=new_params, opt=new_opt), metrics
+
+    shapes, pspecs, opt_shapes, opt_specs = param_and_state_specs(
+        cfg, mesh, for_train=True)
+    state_shapes = TrainState(params=shapes, opt=opt_shapes)
+    state_specs = TrainState(params=pspecs, opt=opt_specs)
+    bspecs = shard_lib.train_batch_specs(cfg, b_axis)
+
+    per_host_batch = shape.global_batch
+    batch_shapes = {
+        "tokens": jax.ShapeDtypeStruct((per_host_batch, shape.seq_len),
+                                       jnp.int32),
+        "labels": jax.ShapeDtypeStruct((per_host_batch, shape.seq_len),
+                                       jnp.int32),
+    }
+    if cfg.encoder_layers:
+        batch_shapes["enc_emb"] = jax.ShapeDtypeStruct(
+            (per_host_batch, cfg.encoder_seq_len, cfg.d_model),
+            dtype_of(cfg.compute_dtype))
+
+    in_sh = (shard_lib.named(mesh, state_specs),
+             shard_lib.named(mesh, bspecs))
+    out_sh = (shard_lib.named(mesh, state_specs), None)
+    jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(0,))
+    return CellPlan(cfg=cfg, shape=shape, mesh=mesh, step_fn=jitted,
+                    args=(state_shapes, batch_shapes), kwargs={},
+                    description=f"train_step {cfg.name} x {shape.name}",
+                    in_shardings=in_sh)
+
+
+# ---------------------------------------------------------------------------
+# Serve steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig
+                      ) -> CellPlan:
+    b_axis = batch_axes(mesh)
+    res_spec = None
+    if shape.seq_len % mesh.shape["model"] == 0:
+        res_spec = NamedSharding(mesh, P(b_axis, "model", None))
+
+    def step(params, tokens, enc_emb=None):
+        if cfg.encoder_layers:
+            return model_prefill(params, cfg, tokens, enc_emb=enc_emb,
+                                 residual_spec=res_spec)
+        return model_prefill(params, cfg, tokens, residual_spec=res_spec)
+
+    shapes, pspecs, _, _ = param_and_state_specs(cfg, mesh, for_train=False)
+    B = shape.global_batch
+    args = [shapes,
+            jax.ShapeDtypeStruct((B, shape.seq_len), jnp.int32)]
+    in_specs = [shard_lib.named(mesh, pspecs),
+                NamedSharding(mesh, P(b_axis, None))]
+    if cfg.encoder_layers:
+        args.append(jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq_len, cfg.d_model),
+            dtype_of(cfg.compute_dtype)))
+        in_specs.append(NamedSharding(mesh, P(b_axis, None, None)))
+    jitted = jax.jit(step, in_shardings=tuple(in_specs))
+    return CellPlan(cfg=cfg, shape=shape, mesh=mesh, step_fn=jitted,
+                    args=tuple(args), kwargs={},
+                    description=f"prefill {cfg.name} x {shape.name}",
+                    in_shardings=tuple(in_specs))
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig
+                     ) -> CellPlan:
+    b_axis = batch_axes(mesh)
+    B, S = shape.global_batch, shape.seq_len
+
+    def step(params, caches, tokens, pos, memory=None):
+        logits, new_caches = model_decode_step(params, cfg, caches, tokens,
+                                               pos, memory=memory)
+        return logits, new_caches
+
+    shapes, pspecs, _, _ = param_and_state_specs(cfg, mesh, for_train=False)
+    cache_shapes, cache_specs_ = _cache_shapes_and_specs(cfg, B, S, mesh)
+    dsize = mesh.shape["data"]
+    tok_b = ("data",) if B % dsize == 0 and B >= dsize else None
+
+    args = [shapes, cache_shapes,
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32)]
+    in_specs = [shard_lib.named(mesh, pspecs),
+                shard_lib.named(mesh, cache_specs_),
+                NamedSharding(mesh, P(tok_b, None)),
+                NamedSharding(mesh, P())]
+    kwargs = {}
+    if cfg.encoder_layers:
+        args.append(jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq_len, cfg.d_model),
+            dtype_of(cfg.compute_dtype)))
+        in_specs.append(NamedSharding(mesh, P(tok_b, None, None)))
+    jitted = jax.jit(step, in_shardings=tuple(in_specs))
+    return CellPlan(cfg=cfg, shape=shape, mesh=mesh, step_fn=jitted,
+                    args=tuple(args), kwargs=kwargs,
+                    description=f"decode {cfg.name} x {shape.name}",
+                    in_shardings=tuple(in_specs))
+
+
+def make_cell_plan(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig
+                   ) -> CellPlan:
+    if shape.kind == "train":
+        return make_train_step(cfg, mesh, shape)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, mesh, shape)
+    if shape.kind == "decode":
+        return make_decode_step(cfg, mesh, shape)
+    raise ValueError(shape.kind)

@@ -1,0 +1,8 @@
+"""Sequence-model substrate: layers, attention, MoE, SSM/xLSTM mixers and
+the top-level CausalLM / EncDecLM assembly."""
+from repro.models.transformer import (init_model, train_loss, prefill,
+                                      decode_step, init_caches,
+                                      cache_specs, encode)
+
+__all__ = ["init_model", "train_loss", "prefill", "decode_step",
+           "init_caches", "cache_specs", "encode"]

@@ -1,0 +1,305 @@
+"""GQA attention: init, train/prefill (blockwise-causal, flash-style
+running softmax in pure jnp so CPU lowering stays O(T * chunk) in memory),
+decode-with-KV-cache, sliding windows, and optional Pallas dispatch.
+
+Sharding (DESIGN.md §6): Q heads are sharded over 'model' — padded up to a
+multiple of tp_size with zero-weight heads when the arch's head count is
+not divisible (exact outputs; the padded heads' output rows are zero).
+KV heads are sharded only when divisible, else replicated (Megatron GQA
+practice). The output projection is row-parallel.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import rope as rope_lib
+from repro.models.layers import maybe_shard, normal_init
+
+_NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray      # [B, Hkv, S, Dh]
+    v: jnp.ndarray      # [B, Hkv, S, Dh]
+    length: jnp.ndarray  # [] int32 — number of valid positions
+
+
+def init_attention(cfg: ModelConfig, key, dtype):
+    d = cfg.d_model
+    dh = cfg.resolved_head_dim
+    hq = cfg.padded_heads
+    hkv = cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    kv_spec = "model" if cfg.shard_kv_heads else None
+    params = {
+        "wq": normal_init(ks[0], (d, hq * dh), dtype),
+        "wk": normal_init(ks[1], (d, hkv * dh), dtype),
+        "wv": normal_init(ks[2], (d, hkv * dh), dtype),
+        "wo": normal_init(ks[3], (hq * dh, d), dtype),
+    }
+    specs = {
+        "wq": P(None, "model"),
+        "wk": P(None, kv_spec),
+        "wv": P(None, kv_spec),
+        "wo": P("model", None),
+    }
+    if cfg.num_heads != hq:
+        # Zero the padded heads so wo ignores them exactly.
+        mask = (jnp.arange(hq) < cfg.num_heads).repeat(dh)
+        params["wq"] = params["wq"] * mask[None, :]
+        params["wo"] = params["wo"] * mask[:, None]
+    if cfg.qkv_bias:
+        params["bq"] = jnp.zeros((hq * dh,), dtype)
+        params["bk"] = jnp.zeros((hkv * dh,), dtype)
+        params["bv"] = jnp.zeros((hkv * dh,), dtype)
+        specs["bq"] = P("model")
+        specs["bk"] = P(kv_spec)
+        specs["bv"] = P(kv_spec)
+    return params, specs
+
+
+def _project_qkv(params, x, cfg: ModelConfig, positions):
+    """x [B, T, d] -> q [B, T, Hq, Dh], k/v [B, T, Hkv, Dh] (rope applied)."""
+    B, T, _ = x.shape
+    dh = cfg.resolved_head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(B, T, cfg.padded_heads, dh)
+    k = k.reshape(B, T, cfg.num_kv_heads, dh)
+    v = v.reshape(B, T, cfg.num_kv_heads, dh)
+    kv_ax = "model" if cfg.shard_kv_heads else None
+    q = maybe_shard(q, "batch", None, "model", None)
+    k = maybe_shard(k, "batch", None, kv_ax, None)
+    v = maybe_shard(v, "batch", None, kv_ax, None)
+    if cfg.rope_mode == "mrope":
+        q, k = rope_lib.apply_mrope(q, k, positions, cfg.rope_theta,
+                                    cfg.mrope_sections)
+    else:
+        q, k = rope_lib.apply_rope(q, k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _softcap(s, cap):
+    if cap > 0.0:
+        return cap * jnp.tanh(s / cap)
+    return s
+
+
+def expand_kv_heads(k: jnp.ndarray, v: jnp.ndarray, hq: int, hq_orig: int):
+    """Expand [B, T, Hkv, Dh] k/v to ``hq`` heads via a static index map.
+
+    GQA's grouped einsum ([B, Hkv, g, ...]) defeats GSPMD head-sharding
+    propagation when Hkv doesn't divide the model axis — the expansion
+    keeps attention MHA-shaped so the head dim shards cleanly. Padded
+    q-heads (hq > hq_orig) map to the last kv head (their wq/wo rows are
+    zero, so the result is unaffected).
+    """
+    hkv = k.shape[2]
+    if hkv == hq:
+        return k, v
+    g = max(hq_orig // hkv, 1)
+    idx = jnp.asarray([min(i // g, hkv - 1) for i in range(hq)],
+                      dtype=jnp.int32)
+    return jnp.take(k, idx, axis=2), jnp.take(v, idx, axis=2)
+
+
+def blockwise_causal_attention(q, k, v, *, chunk: int, window: int = 0,
+                               softcap: float = 0.0, causal: bool = True):
+    """Flash-style attention with static (python-loop) block scheduling.
+
+    q/k/v [B, T, H, Dh] (kv pre-expanded to H heads — see
+    `expand_kv_heads`). The lower-triangular block loop skips
+    above-diagonal (and out-of-window) blocks entirely, so compiled FLOPs
+    are ~T^2/2 (vs T^2 for mask-only schedules) and peak temps are
+    O(chunk^2) per head — this is what keeps 32k prefill lowerable.
+    """
+    B, T, H, Dh = q.shape
+    scale = 1.0 / math.sqrt(Dh)
+    nq = -(-T // chunk)
+    pad = nq * chunk - T
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qb = q.reshape(B, nq, chunk, H, Dh).transpose(0, 3, 1, 2, 4)
+    kb = k.reshape(B, nq, chunk, H, Dh).transpose(0, 3, 1, 2, 4)
+    vb = v.reshape(B, nq, chunk, H, Dh).transpose(0, 3, 1, 2, 4)
+    qb = maybe_shard(qb, "batch", "model", None, None, None)
+    kb = maybe_shard(kb, "batch", "model", None, None, None)
+    vb = maybe_shard(vb, "batch", "model", None, None, None)
+
+    pos = jnp.arange(chunk)
+    out_blocks = []
+    for qi in range(nq):
+        acc = jnp.zeros((B, H, chunk, Dh), jnp.float32)
+        m = jnp.full((B, H, chunk, 1), _NEG_INF, jnp.float32)
+        l = jnp.zeros((B, H, chunk, 1), jnp.float32)
+        lo = 0
+        if window > 0:
+            lo = max(0, qi - (window + chunk - 1) // chunk)
+        hi = qi + 1 if causal else nq
+        for ki in range(lo, hi):
+            # bf16 operands, f32 MXU accumulation (no f32 input copies —
+            # halves the q/k/v HBM read traffic; EXPERIMENTS.md §Perf).
+            s = jnp.einsum("bhqd,bhsd->bhqs", qb[:, :, qi], kb[:, :, ki],
+                           preferred_element_type=jnp.float32) * scale
+            s = _softcap(s, softcap)
+            qpos = qi * chunk + pos[:, None]
+            kpos = ki * chunk + pos[None, :]
+            mask = kpos < T  # key padding
+            if causal:
+                mask = jnp.logical_and(mask, qpos >= kpos)
+            if window > 0:
+                mask = jnp.logical_and(mask, qpos - kpos < window)
+            s = jnp.where(mask, s, _NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m - m_new)
+            l = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+            acc = acc * alpha + jnp.einsum(
+                "bhqs,bhsd->bhqd", p.astype(qb.dtype), vb[:, :, ki],
+                preferred_element_type=jnp.float32)
+            m = m_new
+        out_blocks.append(acc / jnp.maximum(l, 1e-30))
+    out = jnp.stack(out_blocks, axis=2)  # [B, H, nq, C, Dh]
+    out = out.transpose(0, 2, 3, 1, 4).reshape(B, nq * chunk, H, Dh)
+    return out[:, :T].astype(q.dtype)
+
+
+def decode_attention(q, cache: KVCache, *, window: int = 0,
+                     softcap: float = 0.0):
+    """Single-token decode: q [B, 1, Hq, Dh] against the cache.
+
+    The cache is a linear buffer of size S; validity is ``pos < length``.
+    For sliding-window layers the buffer is ring-written (see
+    `update_cache`), so every resident entry is in-window by construction.
+    """
+    B, Tq, Hq, Dh = q.shape
+    Hkv = cache.k.shape[1]
+    g = Hq // Hkv
+    scale = 1.0 / math.sqrt(Dh)
+    qh = q.transpose(0, 2, 1, 3).reshape(B, Hkv, g * Tq, Dh)
+    s = jnp.einsum("bkqd,bksd->bkqs", qh.astype(jnp.float32),
+                   cache.k.astype(jnp.float32)) * scale
+    s = _softcap(s, softcap)
+    S = cache.k.shape[2]
+    valid = jnp.arange(S)[None, None, None, :] < cache.length
+    s = jnp.where(valid, s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkqs,bksd->bkqd", p, cache.v.astype(jnp.float32))
+    out = out.reshape(B, Hkv, g, Tq, Dh).transpose(0, 3, 1, 2, 4)
+    return out.reshape(B, Tq, Hq, Dh).astype(q.dtype)
+
+
+def init_kv_cache(cfg: ModelConfig, B: int, S: int, dtype) -> KVCache:
+    dh = cfg.resolved_head_dim
+    return KVCache(
+        k=jnp.zeros((B, cfg.num_kv_heads, S, dh), dtype),
+        v=jnp.zeros((B, cfg.num_kv_heads, S, dh), dtype),
+        length=jnp.zeros((), jnp.int32))
+
+
+def kv_cache_spec(cfg: ModelConfig, batch_spec=("data",)):
+    kv = "model" if cfg.shard_kv_heads else None
+    return KVCache(k=P(batch_spec, kv, None, None),
+                   v=P(batch_spec, kv, None, None),
+                   length=P())
+
+
+def update_cache(cache: KVCache, k_new, v_new, *, window: int = 0
+                 ) -> KVCache:
+    """Append one step (k/v [B, 1, Hkv, Dh]); ring-buffer if windowed."""
+    S = cache.k.shape[2]
+    idx = cache.length % S if window > 0 else jnp.minimum(cache.length, S - 1)
+    kn = k_new.transpose(0, 2, 1, 3)
+    vn = v_new.transpose(0, 2, 1, 3)
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, kn.astype(cache.k.dtype),
+                                            idx, axis=2)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, vn.astype(cache.v.dtype),
+                                            idx, axis=2)
+    return KVCache(k=k, v=v, length=cache.length + 1)
+
+
+def attention_layer(params, x, cfg: ModelConfig, positions, *,
+                    cache: Optional[KVCache] = None, window: int = 0,
+                    causal: bool = True
+                    ) -> Tuple[jnp.ndarray, Optional[KVCache]]:
+    """Full attention sublayer. Returns (output [B, T, d], updated cache).
+
+    * cache is None  -> train/prefill via blockwise-causal attention.
+    * cache provided -> single-step decode (T == 1) against the cache.
+    """
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    if cache is None:
+        ke, ve = expand_kv_heads(k, v, cfg.padded_heads, cfg.num_heads)
+        ke = maybe_shard(ke, "batch", None, "model", None)
+        ve = maybe_shard(ve, "batch", None, "model", None)
+        ctx = blockwise_causal_attention(
+            q, ke, ve, chunk=min(cfg.attn_chunk, x.shape[1]), window=window,
+            softcap=cfg.attn_logit_softcap, causal=causal)
+        ctx = maybe_shard(ctx, "batch", None, "model", None)
+        new_cache = None
+    else:
+        new_cache = update_cache(cache, k, v, window=window)
+        # Decode runs on the original heads only: padded q-heads have zero
+        # wq/wo rows, so their context is irrelevant — and slicing keeps
+        # the grouped [Hkv, g] reshape rectangular.
+        q_att = q[:, :, :cfg.num_heads]
+        ctx = decode_attention(q_att, new_cache, window=window,
+                               softcap=cfg.attn_logit_softcap)
+        if cfg.padded_heads != cfg.num_heads:
+            ctx = jnp.pad(ctx, ((0, 0), (0, 0),
+                                (0, cfg.padded_heads - cfg.num_heads),
+                                (0, 0)))
+    B, T = x.shape[:2]
+    out = ctx.reshape(B, T, -1) @ params["wo"]
+    return out, new_cache
+
+
+def cross_attention_layer(params, x, memory, cfg: ModelConfig
+                          ) -> jnp.ndarray:
+    """Encoder-decoder cross attention (memory precomputed, non-causal).
+
+    Reuses the same projections with keys/values from ``memory``.
+    """
+    B, T, _ = x.shape
+    S = memory.shape[1]
+    dh = cfg.resolved_head_dim
+    q = (x @ params["wq"]).reshape(B, T, cfg.padded_heads, dh)
+    k = (memory @ params["wk"]).reshape(B, S, cfg.num_kv_heads, dh)
+    v = (memory @ params["wv"]).reshape(B, S, cfg.num_kv_heads, dh)
+    k, v = expand_kv_heads(k, v, cfg.padded_heads, cfg.num_heads)
+    ctx = _chunked_cross(q, k, v, chunk=min(cfg.attn_chunk, T))
+    return ctx.reshape(B, T, -1) @ params["wo"]
+
+
+def _chunked_cross(q, k, v, *, chunk: int):
+    """Non-causal cross attention, q-chunked so temps stay O(chunk * S).
+    kv pre-expanded to q's head count (see `expand_kv_heads`)."""
+    B, T, H, Dh = q.shape
+    scale = 1.0 / math.sqrt(Dh)
+    nq = -(-T // chunk)
+    pad = nq * chunk - T
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    outs = []
+    for qi in range(nq):
+        qc = q[:, qi * chunk:(qi + 1) * chunk]
+        s = jnp.einsum("bqhd,bshd->bhqs", qc.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqs,bshd->bqhd", p, v.astype(jnp.float32))
+        outs.append(o)
+    out = jnp.concatenate(outs, axis=1)[:, :T]
+    return out.astype(q.dtype)

@@ -1,0 +1,195 @@
+"""Residual blocks and the heterogeneous layer schedule.
+
+Layer stacks are `lax.scan`s over stacked per-layer params (compile-size
+O(1) in depth). Heterogeneous architectures (Hymba's global/sliding
+attention layers, xLSTM's 7:1 mLSTM:sLSTM pattern) are split into runs of
+consecutive identical layers — params are stacked per run and each run is
+one scan (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import mlp as mlp_lib
+from repro.models import ssm as ssm_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.layers import init_rms_norm, rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class Run:
+    kind: str          # dense | moe | hybrid | mlstm | slstm
+    count: int
+    window: int        # 0 = full attention (attention kinds only)
+    first_layer: int
+
+
+def layer_schedule(cfg: ModelConfig) -> List[Run]:
+    kinds = []
+    for i in range(cfg.num_layers):
+        if cfg.family == "ssm":
+            kind = "slstm" if i in cfg.slstm_layers else "mlstm"
+            window = 0
+        elif cfg.family == "hybrid":
+            kind = "hybrid"
+            window = 0 if i in cfg.global_layers else cfg.sliding_window
+        elif cfg.num_experts:
+            kind, window = "moe", cfg.sliding_window
+        else:
+            kind, window = "dense", cfg.sliding_window
+        kinds.append((kind, window))
+    runs: List[Run] = []
+    for i, kw in enumerate(kinds):
+        if runs and (runs[-1].kind, runs[-1].window) == kw:
+            runs[-1] = dataclasses.replace(runs[-1],
+                                           count=runs[-1].count + 1)
+        else:
+            runs.append(Run(kind=kw[0], count=1, window=kw[1],
+                            first_layer=i))
+    return runs
+
+
+# ---------------------------------------------------------------------------
+# Single-layer init / apply per kind
+# ---------------------------------------------------------------------------
+
+def init_block(cfg: ModelConfig, kind: str, key, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    params: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    if kind in ("dense", "moe", "hybrid"):
+        params["ln1"], specs["ln1"] = init_rms_norm(d, dtype)
+        params["attn"], specs["attn"] = attn_lib.init_attention(cfg, ks[0],
+                                                                dtype)
+        params["ln2"], specs["ln2"] = init_rms_norm(d, dtype)
+        if kind == "moe":
+            params["moe"], specs["moe"] = moe_lib.init_moe(cfg, ks[1], dtype)
+        else:
+            params["mlp"], specs["mlp"] = mlp_lib.init_mlp(ks[1], d,
+                                                           cfg.d_ff, dtype)
+        if kind == "hybrid":
+            params["ssm"], specs["ssm"] = ssm_lib.init_ssm(cfg, ks[2], dtype)
+            params["ln_ssm"], specs["ln_ssm"] = init_rms_norm(d, dtype)
+    elif kind == "mlstm":
+        params["ln1"], specs["ln1"] = init_rms_norm(d, dtype)
+        params["mlstm"], specs["mlstm"] = xlstm_lib.init_mlstm(cfg, ks[0],
+                                                               dtype)
+    elif kind == "slstm":
+        params["ln1"], specs["ln1"] = init_rms_norm(d, dtype)
+        params["slstm"], specs["slstm"] = xlstm_lib.init_slstm(cfg, ks[0],
+                                                               dtype)
+    else:
+        raise ValueError(kind)
+    return params, specs
+
+
+def apply_block(params, x, cfg: ModelConfig, kind: str, *, positions,
+                window: int, cache=None, causal: bool = True):
+    """Pre-norm residual block. Returns (x, new_cache, aux_loss).
+
+    Sublayer outputs are SP-constrained (batch, 'model') *before* the
+    residual add in train/prefill so the TP output-projection psum lowers
+    to a reduce-scatter rather than a full-sequence all-reduce
+    (EXPERIMENTS.md §Perf, deepseek iteration 2)."""
+    from repro.models.layers import maybe_shard
+    aux = jnp.zeros((), jnp.float32)
+    decoding = cache is not None
+
+    def sp(t):
+        if decoding or t.shape[1] % max(cfg.tp_size, 1):
+            return t
+        return maybe_shard(t, "batch", "model", None)
+
+    if kind in ("dense", "moe", "hybrid"):
+        h = rms_norm(x, params["ln1"], cfg.rmsnorm_eps)
+        attn_cache = cache["attn"] if cache is not None else None
+        a, new_attn_cache = attn_lib.attention_layer(
+            params["attn"], h, cfg, positions, cache=attn_cache,
+            window=window, causal=causal)
+        if kind == "hybrid":
+            # Hymba: parallel attention + SSM heads, averaged after
+            # per-branch normalization.
+            ssm_cache = cache["ssm"] if cache is not None else None
+            s, new_ssm_cache = ssm_lib.ssm_layer(params["ssm"], h, cfg,
+                                                 cache=ssm_cache)
+            s = rms_norm(s, params["ln_ssm"], cfg.rmsnorm_eps)
+            x = x + 0.5 * (sp(a) + sp(s))
+        else:
+            x = x + sp(a)
+            new_ssm_cache = None
+        h2 = rms_norm(x, params["ln2"], cfg.rmsnorm_eps)
+        if kind == "moe":
+            m, aux = moe_lib.moe_layer(params["moe"], h2, cfg)
+        else:
+            m = mlp_lib.mlp(params["mlp"], h2)
+        x = x + sp(m)
+        new_cache = None
+        if cache is not None:
+            new_cache = dict(attn=new_attn_cache)
+            if kind == "hybrid":
+                new_cache["ssm"] = new_ssm_cache
+    elif kind == "mlstm":
+        h = rms_norm(x, params["ln1"], cfg.rmsnorm_eps)
+        y, new_c = xlstm_lib.mlstm_layer(params["mlstm"], h, cfg,
+                                         cache=cache)
+        x = x + sp(y)
+        new_cache = new_c
+    elif kind == "slstm":
+        h = rms_norm(x, params["ln1"], cfg.rmsnorm_eps)
+        y, new_c = xlstm_lib.slstm_layer(params["slstm"], h, cfg,
+                                         cache=cache)
+        x = x + sp(y)
+        new_cache = new_c
+    else:
+        raise ValueError(kind)
+    return x, new_cache, aux
+
+
+def init_run_cache(cfg: ModelConfig, run: Run, B: int, S: int, dtype):
+    """Stacked decode caches for a run ([count, ...] leading dim)."""
+    def one(_):
+        if run.kind in ("dense", "moe"):
+            return dict(attn=attn_lib.init_kv_cache(
+                cfg, B, S if run.window == 0 else min(S, run.window), dtype))
+        if run.kind == "hybrid":
+            return dict(
+                attn=attn_lib.init_kv_cache(
+                    cfg, B, S if run.window == 0 else min(S, run.window),
+                    dtype),
+                ssm=ssm_lib.init_ssm_cache(cfg, B, dtype))
+        if run.kind == "mlstm":
+            return xlstm_lib.init_mlstm_cache(cfg, B, dtype)
+        if run.kind == "slstm":
+            return xlstm_lib.init_slstm_cache(cfg, B, dtype)
+        raise ValueError(run.kind)
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *[one(i) for i in range(run.count)]) \
+        if run.count > 1 else jax.tree_util.tree_map(
+            lambda x: x[None], one(0))
+
+
+def run_cache_spec(cfg: ModelConfig, run: Run, batch_spec=("data",)):
+    from jax.sharding import PartitionSpec as P
+
+    def prepend(spec):
+        return P(*((None,) + tuple(spec)))
+    if run.kind in ("dense", "moe"):
+        base = dict(attn=attn_lib.kv_cache_spec(cfg, batch_spec))
+    elif run.kind == "hybrid":
+        base = dict(attn=attn_lib.kv_cache_spec(cfg, batch_spec),
+                    ssm=ssm_lib.ssm_cache_spec(cfg, batch_spec))
+    elif run.kind == "mlstm":
+        base = xlstm_lib.mlstm_cache_spec(cfg, batch_spec)
+    elif run.kind == "slstm":
+        base = xlstm_lib.slstm_cache_spec(cfg, batch_spec)
+    else:
+        raise ValueError(run.kind)
+    return jax.tree_util.tree_map(prepend, base)

@@ -1,0 +1,140 @@
+"""Shared neural-net building blocks (functional; params are plain pytrees).
+
+Every ``init_*`` returns ``(params, specs)`` where ``specs`` mirrors the
+param tree with `jax.sharding.PartitionSpec` leaves — sharding is decided
+where shapes are known (DESIGN.md §6). Axis names: 'data', 'model'
+(+ optional leading 'pod' handled at the launcher level).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16, "float64": jnp.float64}[name]
+
+
+def _active_mesh():
+    """The ambient physical mesh ('with mesh:'), or None."""
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        from jax.interpreters import pxla
+        env_mesh = pxla.thread_resources.env.physical_mesh
+    return None if env_mesh.empty else env_mesh
+
+
+def _active_mesh_axes():
+    """Axis names of the ambient physical mesh ('with mesh:'), or ()."""
+    mesh = _active_mesh()
+    return () if mesh is None else tuple(mesh.axis_names)
+
+
+def maybe_shard(x: jnp.ndarray, *entries):
+    """`with_sharding_constraint` that is a no-op outside a mesh context.
+
+    Entry "batch" expands to ('pod', 'data') / ('data',) depending on the
+    active mesh; axis names absent from the mesh are dropped. GSPMD's
+    unconstrained propagation makes poor choices inside blocked attention
+    (it replicates heads and partial-contracts instead), so the model code
+    pins the intended layout explicitly (DESIGN.md §6).
+    """
+    axes = _active_mesh_axes()
+    if not axes:
+        return x
+    from jax.sharding import PartitionSpec as _P
+
+    def fix(e):
+        if e == "batch":
+            return ("pod", "data") if "pod" in axes else ("data",)
+        if isinstance(e, str):
+            return e if e in axes else None
+        return e
+    spec = _P(*[fix(e) for e in entries])
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def normal_init(key, shape, dtype, scale: float = 0.02):
+    return scale * jax.random.normal(key, shape, dtype=jnp.float32) \
+        .astype(dtype)
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5
+             ) -> jnp.ndarray:
+    # f32 only for the mean-square reduction; the normalize multiply stays
+    # in the input dtype so activation *gradients* stay bf16 (halves the
+    # TP all-reduce bytes — EXPERIMENTS.md §Perf, deepseek iteration 2).
+    xf = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return x * scale.astype(x.dtype) * w
+
+
+def init_rms_norm(d: int, dtype) -> Tuple[jnp.ndarray, P]:
+    return jnp.ones((d,), dtype), P(None)
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray = None
+          ) -> jnp.ndarray:
+    y = x @ w
+    if b is not None:
+        y = y + b
+    return y
+
+
+def init_dense(key, d_in: int, d_out: int, dtype, *, bias: bool = False,
+               in_spec=None, out_spec=None, scale: float = 0.02):
+    """Weight [d_in, d_out] with explicit sharding of each dim."""
+    w = normal_init(key, (d_in, d_out), dtype, scale)
+    params = {"w": w}
+    specs = {"w": P(in_spec, out_spec)}
+    if bias:
+        params["b"] = jnp.zeros((d_out,), dtype)
+        specs["b"] = P(out_spec)
+    return params, specs
+
+
+def embedding_lookup(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, ids, axis=0)
+
+
+def init_embedding(key, vocab: int, d: int, dtype, *, vocab_spec="model"):
+    table = normal_init(key, (vocab, d), dtype)
+    return table, P(vocab_spec, None)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def softcap(x, cap: float):
+    """Logit soft-capping (used by grok-style models)."""
+    return cap * jnp.tanh(x / cap)
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                       vocab_size: int, *, z_loss: float = 0.0,
+                       ignore_id: int = -1):
+    """Mean CE over valid tokens; logits may have padded vocab (masked).
+
+    logits: [..., Vp] (f32 recommended); labels: [...] int32.
+    """
+    Vp = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if Vp > vocab_size:
+        neg = jnp.full((Vp - vocab_size,), -1e30, jnp.float32)
+        logits = logits.at[..., vocab_size:].set(neg)
+    valid = labels != ignore_id
+    safe_labels = jnp.where(valid, labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe_labels[..., None],
+                             axis=-1)[..., 0]
+    nll = lse - ll
+    if z_loss > 0.0:
+        nll = nll + z_loss * lse ** 2
+    denom = jnp.maximum(jnp.sum(valid), 1)
+    return jnp.sum(jnp.where(valid, nll, 0.0)) / denom

@@ -1,0 +1,28 @@
+"""SwiGLU MLP (column-parallel gate/up, row-parallel down: one all-reduce
+per block under GSPMD)."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import normal_init, silu
+
+
+def init_mlp(key, d: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 3)
+    params = {
+        "w_gate": normal_init(ks[0], (d, d_ff), dtype),
+        "w_up": normal_init(ks[1], (d, d_ff), dtype),
+        "w_down": normal_init(ks[2], (d_ff, d), dtype),
+    }
+    specs = {
+        "w_gate": P(None, "model"),
+        "w_up": P(None, "model"),
+        "w_down": P("model", None),
+    }
+    return params, specs
+
+
+def mlp(params, x):
+    h = silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    return h @ params["w_down"]

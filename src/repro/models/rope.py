@@ -1,0 +1,83 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL's M-RoPE.
+
+M-RoPE splits the head-dim rotary channels into three sections
+(temporal / height / width) driven by 3-row position ids; for pure-text
+tokens all three rows are equal, reducing exactly to standard RoPE.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+
+
+def rope_angles(head_dim: int, theta: float, positions: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions [..., T] -> (cos, sin) each [..., T, head_dim/2]."""
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * inv_freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _rotate(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray
+            ) -> jnp.ndarray:
+    """x [..., T, H, D]; cos/sin [..., T, D/2] broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]  # add head axis
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+def apply_rope(q: jnp.ndarray, k: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """q [B, T, Hq, D], k [B, T, Hkv, D], positions [B, T] (int)."""
+    cos, sin = rope_angles(q.shape[-1], theta, positions)
+    return _rotate(q, cos, sin), _rotate(k, cos, sin)
+
+
+def mrope_angles(head_dim: int, theta: float, positions: jnp.ndarray,
+                 sections: Sequence[int]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """M-RoPE: positions [3, B, T]; sections sum to head_dim/2.
+
+    Channel block ``i`` (of size sections[i], in rotary-frequency space)
+    takes its rotation angle from positions row i.
+    """
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang_all = positions[..., None].astype(jnp.float32) * inv_freq  # [3,B,T,half]
+    parts = []
+    start = 0
+    for i, sec in enumerate(sections):
+        parts.append(ang_all[i, ..., start:start + sec])
+        start += sec
+    ang = jnp.concatenate(parts, axis=-1)  # [B, T, half]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_mrope(q: jnp.ndarray, k: jnp.ndarray, positions: jnp.ndarray,
+                theta: float, sections: Sequence[int]
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """q [B, T, Hq, D], k [B, T, Hkv, D], positions [3, B, T]."""
+    cos, sin = mrope_angles(q.shape[-1], theta, positions, sections)
+    return _rotate(q, cos, sin), _rotate(k, cos, sin)
+
+
+def text_mrope_positions(B: int, T: int, offset: int = 0) -> jnp.ndarray:
+    """Pure-text M-RoPE positions: all three rows equal (== RoPE)."""
+    pos = offset + jnp.arange(T, dtype=jnp.int32)
+    return jnp.broadcast_to(pos, (3, B, T))
+
+
+def vision_mrope_positions(B: int, grid_t: int, grid_h: int, grid_w: int
+                           ) -> jnp.ndarray:
+    """Patch-token M-RoPE positions for a (t, h, w) grid, flattened in
+    raster order. Returns [3, B, t*h*w]."""
+    t = jnp.repeat(jnp.arange(grid_t), grid_h * grid_w)
+    h = jnp.tile(jnp.repeat(jnp.arange(grid_h), grid_w), grid_t)
+    w = jnp.tile(jnp.arange(grid_w), grid_t * grid_h)
+    pos = jnp.stack([t, h, w]).astype(jnp.int32)      # [3, T]
+    return jnp.broadcast_to(pos[:, None, :], (3, B, pos.shape[1]))

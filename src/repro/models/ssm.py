@@ -1,0 +1,160 @@
+"""Selective SSM (Mamba-style) sequence mixer, built on the paper's
+parallel-scan engine (DESIGN.md §2): the state recurrence
+``h_t = a_t * h_{t-1} + b_t`` is the covariance-free diagonal case of the
+smoothing combine (Eq. 19), executed by `jax.lax.associative_scan` /
+the `ssm_scan` Pallas kernel / the cross-device sharded scan.
+
+Chunked execution: the expanded element arrays are [B, CT, d_inner*n] per
+chunk (never [B, T, d_inner*n]), with the running state carried by an
+outer `lax.scan`; the chunk body is rematerialized in backward.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.scan import (LinearRecurrenceElement,
+                             linear_recurrence_combine)
+from repro.models.layers import normal_init, silu
+
+
+class SSMCache(NamedTuple):
+    h: jnp.ndarray     # [B, d_inner, n] state
+    conv: jnp.ndarray  # [B, K-1, d_inner] last inputs for the causal conv
+
+
+def init_ssm(cfg: ModelConfig, key, dtype):
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    K = cfg.ssm_conv
+    dt_rank = max(d // 16, 1)
+    ks = jax.random.split(key, 6)
+    params = {
+        "in_proj": normal_init(ks[0], (d, 2 * din), dtype),
+        "conv_w": normal_init(ks[1], (K, din), dtype, scale=0.5),
+        "x_proj": normal_init(ks[2], (din, dt_rank + 2 * n), dtype),
+        "dt_w": normal_init(ks[3], (dt_rank, din), dtype),
+        "dt_bias": jnp.zeros((din,), dtype),
+        # A in (-1, 0): stable decays; stored as log(-A).
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (din, n))).astype(dtype),
+        "D": jnp.ones((din,), dtype),
+        "out_proj": normal_init(ks[5], (din, d), dtype),
+    }
+    specs = {
+        "in_proj": P(None, "model"),
+        "conv_w": P(None, "model"),
+        "x_proj": P("model", None),
+        "dt_w": P(None, "model"),
+        "dt_bias": P("model"),
+        "A_log": P("model", None),
+        "D": P("model"),
+        "out_proj": P("model", None),
+    }
+    return params, specs
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray,
+                 history: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv: x [B, T, din], w [K, din]."""
+    K = w.shape[0]
+    if history is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([history.astype(x.dtype), x], axis=1)
+    T = x.shape[1]
+    out = jnp.zeros_like(x)
+    for j in range(K):
+        out = out + w[j] * xp[:, j:j + T]
+    return out
+
+
+def _elements(params, x_conv, dt_bc, cfg: ModelConfig):
+    """Build scan elements a, b [B, T, din, n] from conv'd inputs."""
+    n = cfg.ssm_state
+    dt_rank = params["dt_w"].shape[0]
+    dt_r = dt_bc[..., :dt_rank]
+    Bc = dt_bc[..., dt_rank:dt_rank + n].astype(jnp.float32)
+    Cc = dt_bc[..., dt_rank + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        (dt_r @ params["dt_w"]).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32))          # [B, T, din]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))      # [din, n]
+    a = jnp.exp(dt[..., None] * A)                          # [B, T, din, n]
+    xf = x_conv.astype(jnp.float32)
+    b = (dt * xf)[..., None] * Bc[..., None, :]             # [B, T, din, n]
+    return a, b, Cc
+
+
+def ssm_layer(params, x: jnp.ndarray, cfg: ModelConfig, *,
+              cache: Optional[SSMCache] = None
+              ) -> Tuple[jnp.ndarray, Optional[SSMCache]]:
+    """x [B, T, d] -> (y [B, T, d], updated cache for decode)."""
+    B, T, d = x.shape
+    din = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    xz = x @ params["in_proj"]
+    xs, z = xz[..., :din], xz[..., din:]
+
+    if cache is not None:
+        # Single-step decode: O(1) state update (the long_500k path).
+        new_conv = jnp.concatenate([cache.conv, xs], axis=1)[:, 1:]
+        xc = silu(_causal_conv(xs, params["conv_w"], history=cache.conv))
+        dt_bc = xc @ params["x_proj"]
+        a, b, Cc = _elements(params, xc, dt_bc, cfg)
+        h = a[:, 0] * cache.h + b[:, 0]                    # [B, din, n]
+        y = jnp.einsum("bdn,bn->bd", h, Cc[:, 0])[:, None, :]
+        y = y + params["D"].astype(jnp.float32) * xc.astype(jnp.float32)
+        y = (y * silu(z.astype(jnp.float32))).astype(x.dtype)
+        out = y @ params["out_proj"]
+        return out, SSMCache(h=h, conv=new_conv)
+
+    xc = silu(_causal_conv(xs, params["conv_w"]))
+    dt_bc = xc @ params["x_proj"]
+
+    # Chunked scan over time with remat'd chunk bodies.
+    CT = min(cfg.scan_chunk, T)
+    pad = (-T) % CT
+    def pad_t(arr):
+        return jnp.pad(arr, ((0, 0), (0, pad)) + ((0, 0),) * (arr.ndim - 2))
+    xc_p, dtbc_p = pad_t(xc), pad_t(dt_bc)
+    nc = (T + pad) // CT
+    xc_ch = xc_p.reshape(B, nc, CT, din).transpose(1, 0, 2, 3)
+    dtbc_ch = dtbc_p.reshape(B, nc, CT, -1).transpose(1, 0, 2, 3)
+
+    @jax.checkpoint
+    def chunk_body(h0, inp):
+        xcc, dtc = inp
+        a, b, Cc = _elements(params, xcc, dtc, cfg)
+        a2 = a.reshape(B, CT, din * n)
+        b2 = b.reshape(B, CT, din * n)
+        b2 = b2.at[:, 0].add(a2[:, 0] * h0.reshape(B, din * n))
+        scanned = jax.lax.associative_scan(
+            linear_recurrence_combine,
+            LinearRecurrenceElement(a=a2, b=b2), axis=1)
+        hs = scanned.b.reshape(B, CT, din, n)
+        y = jnp.einsum("btdn,btn->btd", hs, Cc)
+        return hs[:, -1], y
+
+    h0 = jnp.zeros((B, din, n), jnp.float32)
+    _, ys = jax.lax.scan(chunk_body, h0, (xc_ch, dtbc_ch))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, nc * CT, din)[:, :T]
+    y = y + params["D"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = (y * silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ params["out_proj"], None
+
+
+def init_ssm_cache(cfg: ModelConfig, B: int, dtype) -> SSMCache:
+    din = cfg.ssm_expand * cfg.d_model
+    return SSMCache(h=jnp.zeros((B, din, cfg.ssm_state), jnp.float32),
+                    conv=jnp.zeros((B, cfg.ssm_conv - 1, din), dtype))
+
+
+def ssm_cache_spec(cfg: ModelConfig, batch_spec=("data",)):
+    return SSMCache(h=P(batch_spec, "model", None),
+                    conv=P(batch_spec, None, "model"))

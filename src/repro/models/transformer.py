@@ -1,0 +1,298 @@
+"""Top-level models: CausalLM (all decoder-only archs, incl. MoE, hybrid
+and xLSTM families) and EncDecLM (seamless-m4t backbone, audio frontend
+stubbed). Functional API:
+
+    params, specs = init_model(cfg, key)
+    loss, metrics = train_loss(params, cfg, batch)
+    logits, caches = prefill(params, cfg, tokens)
+    logits, caches = decode_step(params, cfg, caches, tokens, pos)
+
+Modality frontends ([audio]/[vlm]) are stubs per the task spec:
+`batch["enc_emb"]` / vision spans carry *precomputed* frame/patch
+embeddings; the backbone is real.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import blocks as blocks_lib
+from repro.models import rope as rope_lib
+from repro.models.layers import (cross_entropy_loss, dtype_of,
+                                 embedding_lookup, init_embedding,
+                                 init_rms_norm, normal_init, rms_norm)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_run(cfg: ModelConfig, run: blocks_lib.Run, key, dtype):
+    keys = jax.random.split(key, run.count)
+    ps, ss = [], None
+    for i in range(run.count):
+        p, s = blocks_lib.init_block(cfg, run.kind, keys[i], dtype)
+        ps.append(p)
+        ss = s
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ps) \
+        if run.count > 1 else jax.tree_util.tree_map(lambda x: x[None],
+                                                     ps[0])
+    specs = jax.tree_util.tree_map(
+        lambda sp: P(*((None,) + tuple(sp))), ss,
+        is_leaf=lambda x: isinstance(x, P))
+    return stacked, specs
+
+
+def init_model(cfg: ModelConfig, key) -> Tuple[Dict, Dict]:
+    dtype = dtype_of(cfg.param_dtype)
+    runs = blocks_lib.layer_schedule(cfg)
+    n_keys = len(runs) + 4 + (1 if cfg.encoder_layers else 0)
+    ks = list(jax.random.split(key, n_keys))
+    params: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+
+    params["embed"], specs["embed"] = init_embedding(
+        ks[0], cfg.padded_vocab, cfg.d_model, dtype)
+    params["runs"] = []
+    specs["runs"] = []
+    for i, run in enumerate(runs):
+        p, s = _init_run(cfg, run, ks[1 + i], dtype)
+        params["runs"].append(p)
+        specs["runs"].append(s)
+    params["final_norm"], specs["final_norm"] = init_rms_norm(cfg.d_model,
+                                                              dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal_init(ks[len(runs) + 1],
+                                        (cfg.d_model, cfg.padded_vocab),
+                                        dtype)
+        specs["lm_head"] = P(None, "model")
+    if cfg.encoder_layers:
+        enc_run = blocks_lib.Run(kind="dense", count=cfg.encoder_layers,
+                                 window=0, first_layer=0)
+        params["encoder"], specs["encoder"] = _init_run(
+            cfg, enc_run, ks[len(runs) + 2], dtype)
+        params["enc_norm"], specs["enc_norm"] = init_rms_norm(cfg.d_model,
+                                                              dtype)
+        # Cross-attention params per decoder layer (single stacked run).
+        xa, xs_ = [], None
+        xkeys = jax.random.split(ks[len(runs) + 3], cfg.num_layers)
+        for i in range(cfg.num_layers):
+            p, s = attn_lib.init_attention(cfg, xkeys[i], dtype)
+            xa.append(p)
+            xs_ = s
+        params["cross_attn"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *xa)
+        specs["cross_attn"] = jax.tree_util.tree_map(
+            lambda sp: P(*((None,) + tuple(sp))), xs_,
+            is_leaf=lambda x: isinstance(x, P))
+        params["ln_cross"] = jnp.ones((cfg.num_layers, cfg.d_model), dtype)
+        specs["ln_cross"] = P(None, None)
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# Stack application (scan over runs)
+# ---------------------------------------------------------------------------
+
+def _positions(cfg: ModelConfig, B: int, T: int, offset=0):
+    if cfg.rope_mode == "mrope":
+        pos = offset + jnp.arange(T, dtype=jnp.int32)
+        return jnp.broadcast_to(pos, (3, B, T))
+    pos = offset + jnp.arange(T, dtype=jnp.int32)
+    return jnp.broadcast_to(pos, (B, T))
+
+
+def _apply_stack(params_runs, x, cfg: ModelConfig, runs, *, positions,
+                 caches=None, causal=True, cross=None,
+                 residual_spec=None):
+    """Apply all runs. ``caches``: list aligned with runs (or None).
+    ``cross``: optional (cross_params_stacked, ln_cross, memory) for
+    enc-dec — that path unrolls layers in python (enc-dec decoders here
+    are shallow) to keep the encoder memory out of scan xs.
+    Returns (x, new_caches, aux_total)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches: Optional[List] = [] if caches is not None else None
+    layer_offset = 0
+    jtm = jax.tree_util.tree_map
+
+    def constrain(t):
+        # Megatron-style sequence-parallel residual stream: between blocks
+        # the [B, T, d] carry lives sharded over (batch, seq) — GSPMD
+        # inserts the all-gather/reduce-scatter pair around each block.
+        if residual_spec is None:
+            return t
+        return jax.lax.with_sharding_constraint(t, residual_spec)
+
+    x = constrain(x)
+    for ri, run in enumerate(runs):
+        rp = params_runs[ri]
+        rcache = caches[ri] if caches is not None else None
+
+        if cross is not None:
+            xa_p, ln_x, memory = cross
+            block_fn = blocks_lib.apply_block
+            if cfg.remat == "block":
+                block_fn = jax.checkpoint(block_fn,
+                                          static_argnums=(3,))
+            out_cs = []
+            for li in range(run.count):
+                gl = layer_offset + li
+                lp = jtm(lambda a: a[li], rp)
+                lc = jtm(lambda a: a[li], rcache) if rcache is not None \
+                    else None
+                x, nc, a = blocks_lib.apply_block(
+                    lp, x, cfg, run.kind, positions=positions,
+                    window=run.window, cache=lc, causal=causal)
+                h = rms_norm(x, ln_x[gl], cfg.rmsnorm_eps)
+                x = constrain(x + attn_lib.cross_attention_layer(
+                    jtm(lambda a: a[gl], xa_p), h, memory, cfg))
+                aux_total = aux_total + a
+                if nc is not None:
+                    out_cs.append(nc)
+            out_c = jtm(lambda *xs: jnp.stack(xs), *out_cs) \
+                if out_cs else None
+        else:
+            def body(carry, layer_in, kind=run.kind, window=run.window,
+                     has_cache=rcache is not None):
+                xc, aux = carry
+                lp, lc = layer_in if has_cache else (layer_in, None)
+                xc, new_c, a = blocks_lib.apply_block(
+                    lp, xc, cfg, kind, positions=positions, window=window,
+                    cache=lc, causal=causal)
+                return (constrain(xc), aux + a), new_c
+
+            if cfg.remat == "block":
+                body = jax.checkpoint(body)
+            elif cfg.remat == "dots":
+                # Save matmul outputs, recompute elementwise only: ~40%
+                # less backward recompute traffic for ~2-3 GiB of saved
+                # activations (EXPERIMENTS.md §Perf, deepseek iteration 5).
+                body = jax.checkpoint(
+                    body,
+                    policy=jax.checkpoint_policies
+                    .dots_with_no_batch_dims_saveable)
+            xs_in = (rp, rcache) if rcache is not None else rp
+            (x, aux_total), out_c = jax.lax.scan(body, (x, aux_total),
+                                                 xs_in)
+        if new_caches is not None:
+            new_caches.append(out_c)
+        layer_offset += run.count
+    return x, new_caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Encoder (enc-dec archs)
+# ---------------------------------------------------------------------------
+
+def encode(params, cfg: ModelConfig, enc_emb: jnp.ndarray) -> jnp.ndarray:
+    """enc_emb [B, S, d]: precomputed frontend embeddings (stub)."""
+    B, S, _ = enc_emb.shape
+    positions = _positions(cfg, B, S)
+    run = blocks_lib.Run(kind="dense", count=cfg.encoder_layers, window=0,
+                         first_layer=0)
+
+    def body(carry, lp):
+        x, aux = carry
+        x, _c, a = blocks_lib.apply_block(lp, x, cfg, "dense",
+                                          positions=positions, window=0,
+                                          cache=None, causal=False)
+        return (x, aux + a), None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    (x, _), _ = jax.lax.scan(body, (enc_emb.astype(
+        dtype_of(cfg.compute_dtype)), jnp.zeros((), jnp.float32)),
+        params["encoder"])
+    return rms_norm(x, params["enc_norm"], cfg.rmsnorm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def _logits(params, cfg: ModelConfig, x):
+    x = rms_norm(x, params["final_norm"], cfg.rmsnorm_eps)
+    if cfg.tie_embeddings:
+        return x @ params["embed"].T
+    return x @ params["lm_head"]
+
+
+def train_loss(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+               residual_spec=None):
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    B, T = tokens.shape
+    x = embedding_lookup(params["embed"], tokens).astype(
+        dtype_of(cfg.compute_dtype))
+    positions = _positions(cfg, B, T)
+    runs = blocks_lib.layer_schedule(cfg)
+    cross = None
+    if cfg.encoder_layers:
+        memory = encode(params, cfg, batch["enc_emb"])
+        cross = (params["cross_attn"], params["ln_cross"], memory)
+    x, _, aux = _apply_stack(params["runs"], x, cfg, runs,
+                             positions=positions, cross=cross,
+                             residual_spec=residual_spec)
+    logits = _logits(params, cfg, x)
+    ce = cross_entropy_loss(logits, labels, cfg.vocab_size,
+                            z_loss=cfg.z_loss)
+    loss = ce + cfg.router_aux_coef * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def init_caches(cfg: ModelConfig, B: int, S: int):
+    dtype = dtype_of(cfg.compute_dtype)
+    runs = blocks_lib.layer_schedule(cfg)
+    return [blocks_lib.init_run_cache(cfg, run, B, S, dtype)
+            for run in runs]
+
+
+def cache_specs(cfg: ModelConfig, batch_spec=("data",)):
+    runs = blocks_lib.layer_schedule(cfg)
+    return [blocks_lib.run_cache_spec(cfg, run, batch_spec)
+            for run in runs]
+
+
+def prefill(params, cfg: ModelConfig, tokens: jnp.ndarray,
+            enc_emb: Optional[jnp.ndarray] = None, residual_spec=None):
+    """Forward over the prompt; returns last-position logits. (The serving
+    KV caches are produced by the decode-shaped graphs; prefill lowering is
+    the compute-bound graph the roofline analyses.)"""
+    B, T = tokens.shape
+    x = embedding_lookup(params["embed"], tokens).astype(
+        dtype_of(cfg.compute_dtype))
+    positions = _positions(cfg, B, T)
+    runs = blocks_lib.layer_schedule(cfg)
+    cross = None
+    if cfg.encoder_layers:
+        memory = encode(params, cfg, enc_emb)
+        cross = (params["cross_attn"], params["ln_cross"], memory)
+    x, _, _ = _apply_stack(params["runs"], x, cfg, runs,
+                           positions=positions, cross=cross,
+                           residual_spec=residual_spec)
+    return _logits(params, cfg, x[:, -1:, :])
+
+
+def decode_step(params, cfg: ModelConfig, caches, tokens: jnp.ndarray,
+                pos: jnp.ndarray, memory: Optional[jnp.ndarray] = None):
+    """One decode step: tokens [B, 1], pos [] int32 absolute position.
+    Returns (logits [B, 1, Vp], new_caches)."""
+    B = tokens.shape[0]
+    x = embedding_lookup(params["embed"], tokens).astype(
+        dtype_of(cfg.compute_dtype))
+    positions = _positions(cfg, B, 1, offset=pos)
+    runs = blocks_lib.layer_schedule(cfg)
+    cross = None
+    if cfg.encoder_layers:
+        assert memory is not None, "enc-dec decode needs encoder memory"
+        cross = (params["cross_attn"], params["ln_cross"], memory)
+    x, new_caches, _ = _apply_stack(params["runs"], x, cfg, runs,
+                                    positions=positions, caches=caches,
+                                    cross=cross)
+    return _logits(params, cfg, x), new_caches

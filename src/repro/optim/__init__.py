@@ -1,0 +1,12 @@
+"""Optimizer substrate: AdamW (+ZeRO sharding), schedules, compression."""
+from repro.optim.adamw import (AdamWConfig, AdamWState, adamw_update,
+                               global_norm, init_adamw, zero_specs)
+from repro.optim.schedule import constant, warmup_cosine
+from repro.optim.compression import (CompressionState, compress,
+                                     compressed_psum, decompress,
+                                     init_compression)
+
+__all__ = ["AdamWConfig", "AdamWState", "adamw_update", "global_norm",
+           "init_adamw", "zero_specs", "constant", "warmup_cosine",
+           "CompressionState", "compress", "compressed_psum", "decompress",
+           "init_compression"]

@@ -1,0 +1,116 @@
+"""AdamW with decoupled weight decay, global-norm clipping and ZeRO-style
+sharded moments (fp32 moments regardless of param dtype).
+
+`zero_specs` derives moment shardings from param shardings by additionally
+sharding the largest divisible unsharded dim over 'data' — this is the
+ZeRO-1 layout from DESIGN.md §6 (params stay in their TP layout; optimizer
+state spreads over the full mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray   # [] int32
+    m: Any              # fp32 pytree like params
+    v: Any              # fp32 pytree like params
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def init_adamw(params) -> AdamWState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree_util.tree_map(jnp.copy, zeros))
+
+
+def _decay_mask(path) -> bool:
+    """No weight decay on norms/biases/scalars."""
+    names = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+    flat = "/".join(str(n) for n in names)
+    return not any(t in flat for t in ("norm", "ln", "bias", "b_",
+                                       "dt_bias", "A_log", "D"))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree_util.tree_leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state: AdamWState,
+                 lr_scale: jnp.ndarray = 1.0
+                 ) -> Tuple[Any, AdamWState, dict]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(path, p, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m_new = cfg.b1 * m + (1.0 - cfg.b1) * g32
+        v_new = cfg.b2 * v + (1.0 - cfg.b2) * g32 * g32
+        mhat = m_new / b1c
+        vhat = v_new / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay and _decay_mask(path):
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m_new, v_new
+
+    flat = jax.tree_util.tree_map_with_path(
+        lambda path, p, g, m, v: upd(path, p, g, m, v),
+        params, grads, state.m, state.v)
+    # Unzip the 3-tuples.
+    new_params = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    metrics = {"grad_norm": gnorm, "clip_scale": scale}
+    return new_params, AdamWState(step=step, m=new_m, v=new_v), metrics
+
+
+def zero_specs(param_specs, mesh_axis_sizes: dict, shapes) -> AdamWState:
+    """Moment shardings: param spec + 'data' on the largest divisible
+    unsharded dim (ZeRO-1)."""
+
+    def widen(spec: P, shape) -> P:
+        used = set(a for s in spec for a in
+                   ((s,) if isinstance(s, str) else (s or ())))
+        if "data" in used:
+            return spec
+        dsize = mesh_axis_sizes.get("data", 1)
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        best, best_dim = -1, -1
+        for i, (e, dim) in enumerate(zip(entries, shape)):
+            if e is None and dim % dsize == 0 and dim > best:
+                best, best_dim = dim, i
+        if best_dim >= 0:
+            entries[best_dim] = "data"
+        return P(*entries)
+
+    widened = jax.tree_util.tree_map(
+        lambda sp, shp: widen(sp, shp.shape), param_specs, shapes,
+        is_leaf=lambda x: isinstance(x, P))
+    return AdamWState(step=P(), m=widened,
+                      v=jax.tree_util.tree_map(lambda x: x, widened,
+                                               is_leaf=lambda x:
+                                               isinstance(x, P)))

@@ -1,0 +1,20 @@
+"""LR schedules: linear warmup + cosine decay (the production default)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1):
+    """Returns the multiplicative LR scale at ``step`` (traced-friendly)."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(warmup_steps, 1)
+    prog = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = min_ratio + (1.0 - min_ratio) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def constant(step, value: float = 1.0):
+    del step
+    return jnp.asarray(value, jnp.float32)

@@ -1,0 +1,6 @@
+from repro.runtime.fault import (PreemptionHandler, StepWatchdog,
+                                 StragglerReport, with_retries)
+from repro.runtime.elastic import replan_data, reshard_state, shardings_for
+
+__all__ = ["PreemptionHandler", "StepWatchdog", "StragglerReport",
+           "with_retries", "replan_data", "reshard_state", "shardings_for"]

@@ -1,0 +1,51 @@
+"""Elastic scaling: reshard a training state onto a new mesh and re-split
+the data stream (DESIGN.md §7).
+
+The contract: checkpoints + the deterministic data pipeline are the source
+of truth. On a topology change (node loss or grow), the job restarts with
+a new mesh; `reshard_state` device_puts every leaf under the new mesh's
+NamedShardings (shapes are mesh-independent — only placements change), and
+`replan_data` re-slices the global batch across the surviving hosts.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def shardings_for(mesh: Mesh, specs: Any) -> Any:
+    """PartitionSpec pytree -> NamedSharding pytree on ``mesh``, dropping
+    axis names the new mesh does not have (e.g. 'pod' after shrink)."""
+    axes = set(mesh.axis_names)
+
+    def fix(spec: P) -> NamedSharding:
+        entries = []
+        for e in spec:
+            if e is None:
+                entries.append(None)
+            elif isinstance(e, str):
+                entries.append(e if e in axes else None)
+            else:  # tuple of axes
+                kept = tuple(a for a in e if a in axes)
+                entries.append(kept if kept else None)
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree_util.tree_map(fix, specs,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def reshard_state(state: Any, new_mesh: Mesh, specs: Any) -> Any:
+    """Move/reshard every leaf onto ``new_mesh`` per ``specs``."""
+    shards = shardings_for(new_mesh, specs)
+    flat_s, treedef = jax.tree_util.tree_flatten(
+        shards, is_leaf=lambda x: isinstance(x, NamedSharding))
+    flat_x = treedef.flatten_up_to(state)
+    out = [jax.device_put(x, s) for x, s in zip(flat_x, flat_s)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def replan_data(pipeline, num_hosts: int, host_id: int):
+    """Re-split the deterministic token stream over a new host set."""
+    return pipeline.reshard(num_hosts, host_id)

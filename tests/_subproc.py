@@ -1,0 +1,39 @@
+"""Run a test snippet in a fresh python with multi-device XLA host flags.
+
+XLA locks the device count at first backend init, so tests that need an
+N-device mesh must run in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+
+
+def run_snippet(snippet: str, n_devices: int = 8, timeout: int = 600,
+                extra_env: dict = None) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_devices} "
+                        + env.get("XLA_FLAGS", "").replace(
+                            "--xla_force_host_platform_device_count=512", ""))
+    env["PYTHONPATH"] = REPO_SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env["JAX_PLATFORMS"] = "cpu"
+    if extra_env:
+        env.update(extra_env)
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(snippet)],
+        env=env, capture_output=True, text=True, timeout=timeout)
+    return proc
+
+
+def check_snippet(snippet: str, n_devices: int = 8, timeout: int = 600,
+                  extra_env: dict = None) -> str:
+    proc = run_snippet(snippet, n_devices, timeout, extra_env)
+    assert proc.returncode == 0, (
+        f"subprocess failed (rc={proc.returncode})\n"
+        f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr}")
+    return proc.stdout

@@ -1,0 +1,119 @@
+"""Property tests (hypothesis): the paper's combines must be associative
+and have the claimed identity elements — the invariants that make the
+Blelloch scan valid."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (FilteringElement, SmoothingElement,
+                        filtering_combine, filtering_identity,
+                        smoothing_combine, smoothing_identity,
+                        linear_recurrence_combine, LinearRecurrenceElement)
+
+jtm = jax.tree_util.tree_map
+
+
+def _rng_psd(rng, n, scale=1.0):
+    a = rng.standard_normal((n, n))
+    return scale * (a @ a.T) / n + 0.05 * np.eye(n)
+
+
+def _rand_filtering_element(rng, nx):
+    return FilteringElement(
+        A=jnp.asarray(rng.standard_normal((nx, nx)) / np.sqrt(nx)),
+        b=jnp.asarray(rng.standard_normal(nx)),
+        C=jnp.asarray(_rng_psd(rng, nx)),
+        eta=jnp.asarray(rng.standard_normal(nx)),
+        J=jnp.asarray(_rng_psd(rng, nx)))
+
+
+def _rand_smoothing_element(rng, nx):
+    return SmoothingElement(
+        E=jnp.asarray(rng.standard_normal((nx, nx)) / np.sqrt(nx)),
+        g=jnp.asarray(rng.standard_normal(nx)),
+        L=jnp.asarray(_rng_psd(rng, nx)))
+
+
+def _assert_tree_close(a, b, rtol=1e-8, atol=1e-8):
+    jtm(lambda x, y: np.testing.assert_allclose(x, y, rtol=rtol, atol=atol),
+        a, b)
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 2 ** 32 - 1), nx=st.integers(1, 6))
+def test_filtering_combine_associative(seed, nx):
+    rng = np.random.default_rng(seed)
+    a, b, c = (_rand_filtering_element(rng, nx) for _ in range(3))
+    left = filtering_combine(filtering_combine(a, b), c)
+    right = filtering_combine(a, filtering_combine(b, c))
+    _assert_tree_close(left, right, rtol=1e-6, atol=1e-7)
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 2 ** 32 - 1), nx=st.integers(1, 6))
+def test_smoothing_combine_associative(seed, nx):
+    rng = np.random.default_rng(seed)
+    a, b, c = (_rand_smoothing_element(rng, nx) for _ in range(3))
+    left = smoothing_combine(smoothing_combine(a, b), c)
+    right = smoothing_combine(a, smoothing_combine(b, c))
+    _assert_tree_close(left, right, rtol=1e-8, atol=1e-9)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2 ** 32 - 1), nx=st.integers(1, 5))
+def test_filtering_identity_neutral(seed, nx):
+    rng = np.random.default_rng(seed)
+    a = _rand_filtering_element(rng, nx)
+    e = filtering_identity(nx, jnp.float64)
+    _assert_tree_close(filtering_combine(e, a), a)
+    _assert_tree_close(filtering_combine(a, e), a)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2 ** 32 - 1), nx=st.integers(1, 5))
+def test_smoothing_identity_neutral(seed, nx):
+    rng = np.random.default_rng(seed)
+    a = _rand_smoothing_element(rng, nx)
+    e = smoothing_identity(nx, jnp.float64)
+    _assert_tree_close(smoothing_combine(e, a), a)
+    _assert_tree_close(smoothing_combine(a, e), a)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2 ** 32 - 1), d=st.integers(1, 8))
+def test_linear_recurrence_combine_associative(seed, d):
+    rng = np.random.default_rng(seed)
+    elems = [LinearRecurrenceElement(a=jnp.asarray(rng.standard_normal(d)),
+                                     b=jnp.asarray(rng.standard_normal(d)))
+             for _ in range(3)]
+    a, b, c = elems
+    left = linear_recurrence_combine(linear_recurrence_combine(a, b), c)
+    right = linear_recurrence_combine(a, linear_recurrence_combine(b, c))
+    _assert_tree_close(left, right, rtol=1e-10, atol=1e-10)
+
+
+def test_filtering_combine_reproduces_two_step_filter():
+    """Composing elements 1 and 2 must equal two sequential KF steps."""
+    from repro.core import (LinearizedSSM, filtering_elements, kalman_filter)
+    rng = np.random.default_rng(0)
+    n, nx, ny = 2, 3, 2
+    F = jnp.asarray(rng.standard_normal((n, nx, nx)) / 2)
+    c = jnp.asarray(rng.standard_normal((n, nx)))
+    H = jnp.asarray(rng.standard_normal((n, ny, nx)))
+    d = jnp.asarray(rng.standard_normal((n, ny)))
+    Qp = jnp.stack([jnp.asarray(_rng_psd(rng, nx)) for _ in range(n)])
+    Rp = jnp.stack([jnp.asarray(_rng_psd(rng, ny)) for _ in range(n)])
+    ys = jnp.asarray(rng.standard_normal((n, ny)))
+    m0 = jnp.zeros(nx)
+    P0 = jnp.eye(nx)
+    lin = LinearizedSSM(F=F, c=c, Qp=Qp, H=H, d=d, Rp=Rp)
+
+    elems = filtering_elements(lin, ys, m0, P0)
+    e1 = jtm(lambda x: x[0], elems)
+    e2 = jtm(lambda x: x[1], elems)
+    e12 = filtering_combine(e1, e2)
+
+    seq = kalman_filter(lin, ys, m0, P0)
+    np.testing.assert_allclose(e12.b, seq.mean[1], rtol=1e-9)
+    np.testing.assert_allclose(e12.C, seq.cov[1], rtol=1e-9, atol=1e-10)

@@ -1,0 +1,93 @@
+"""Linearization-strategy tests: Taylor and sigma-point SLR."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import linearize_slr, linearize_taylor
+from repro.core.sigma_points import cubature, gauss_hermite, get_scheme, \
+    unscented
+
+
+@pytest.mark.parametrize("scheme_name", ["cubature", "unscented",
+                                         "gauss_hermite"])
+def test_weights_sum_to_one(scheme_name):
+    sch = get_scheme(scheme_name, 3)
+    np.testing.assert_allclose(np.sum(sch.wm), 1.0, rtol=1e-12)
+    np.testing.assert_allclose(np.sum(sch.wc), 1.0, rtol=1e-12)
+
+
+@pytest.mark.parametrize("scheme_name", ["cubature", "unscented",
+                                         "gauss_hermite"])
+def test_sigma_points_match_first_two_moments(scheme_name):
+    sch = get_scheme(scheme_name, 3)
+    m = jnp.array([1.0, -2.0, 0.5])
+    A = jnp.array([[1.0, 0.2, 0.0], [0.2, 2.0, 0.3], [0.0, 0.3, 0.7]])
+    P = A @ A.T
+    pts, wm, wc = sch.points(m, P)
+    mean = jnp.einsum("s,sd->d", wm, pts)
+    np.testing.assert_allclose(mean, m, rtol=1e-10, atol=1e-10)
+    dx = pts - mean
+    cov = jnp.einsum("s,sd,se->de", wc, dx, dx)
+    np.testing.assert_allclose(cov, P, rtol=1e-8, atol=1e-8)
+
+
+def test_taylor_exact_for_affine():
+    A = jnp.array([[1.0, 2.0], [0.5, -1.0], [3.0, 0.0]])
+    b = jnp.array([0.1, -0.2, 0.3])
+    phi = lambda x: A @ x + b
+    F, c, Lam = linearize_taylor(phi, jnp.array([0.7, -1.3]))
+    np.testing.assert_allclose(F, A, rtol=1e-12)
+    np.testing.assert_allclose(c, b, rtol=1e-10, atol=1e-12)
+    np.testing.assert_allclose(Lam, 0.0, atol=1e-12)
+
+
+@pytest.mark.parametrize("scheme_name", ["cubature", "unscented",
+                                         "gauss_hermite"])
+def test_slr_exact_for_affine(scheme_name):
+    nx = 2
+    sch = get_scheme(scheme_name, nx)
+    A = jnp.array([[1.0, 2.0], [0.5, -1.0]])
+    b = jnp.array([0.1, -0.2])
+    phi = lambda x: A @ x + b
+    m = jnp.array([0.7, -1.3])
+    P = jnp.array([[0.5, 0.1], [0.1, 0.8]])
+    F, c, Lam = linearize_slr(phi, m, P, sch)
+    np.testing.assert_allclose(F, A, rtol=1e-8, atol=1e-9)
+    np.testing.assert_allclose(c, b, rtol=1e-7, atol=1e-9)
+    np.testing.assert_allclose(Lam, 0.0, atol=1e-8)
+
+
+def test_slr_quadratic_has_positive_residual():
+    """For a genuinely nonlinear map, SLR must report Lambda > 0 (this is
+    what distinguishes IPLS from IEKS). The 2-point cubature rule is blind
+    to the curvature of x^2 (symmetric images), so use Gauss-Hermite."""
+    sch = gauss_hermite(1, order=3)
+    phi = lambda x: x * x
+    m = jnp.array([0.3])
+    P = jnp.array([[0.5]])
+    F, c, Lam = linearize_slr(phi, m, P, sch)
+    assert float(Lam[0, 0]) > 1e-4
+
+
+def test_slr_cubature_exp_has_positive_residual():
+    """2-d cubature (4 points) fitting a 3-parameter affine map to a
+    nonlinear function must leave a positive residual. (In 1-d a 2-point
+    rule interpolates exactly, so nx >= 2 is needed to see Lambda > 0.)"""
+    sch = cubature(2)
+    phi = lambda x: jnp.array([jnp.exp(x[0]) * x[1]])
+    F, c, Lam = linearize_slr(phi, jnp.array([0.0, 1.0]),
+                              0.5 * jnp.eye(2), sch)
+    assert float(Lam[0, 0]) > 1e-4
+
+
+def test_gh_integrates_cubics_exactly():
+    """Gauss-Hermite order 3 is exact for polynomials up to degree 5."""
+    sch = gauss_hermite(1, order=3)
+    m = jnp.array([0.5])
+    P = jnp.array([[2.0]])
+    pts, wm, _ = sch.points(m, P)
+    # E[x^3] for N(mu, s2) = mu^3 + 3 mu s2
+    approx = float(jnp.sum(wm * pts[:, 0] ** 3))
+    exact = 0.5 ** 3 + 3 * 0.5 * 2.0
+    np.testing.assert_allclose(approx, exact, rtol=1e-10)

@@ -1,0 +1,78 @@
+"""flash_attention kernel vs naive-softmax oracle: prefill/decode, GQA,
+causal/non-causal, dtype and block-size sweeps (interpret mode)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ref
+from repro.kernels.flash_attention.flash_attention import \
+    flash_attention_batched
+
+TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
+       jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+def _rand_qkv(rng, B, Hq, Hkv, Tq, Tk, Dh, dtype):
+    q = jnp.asarray(rng.standard_normal((B, Hq, Tq, Dh)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, Tk, Dh)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, Tk, Dh)), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,T,Dh", [
+    (1, 2, 2, 64, 32),     # MHA
+    (2, 4, 2, 96, 64),     # GQA 2:1
+    (1, 8, 1, 128, 64),    # MQA
+    (1, 2, 2, 100, 64),    # non-multiple sequence (padding path)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_prefill_causal(B, Hq, Hkv, T, Dh, dtype):
+    rng = np.random.default_rng(T + Hq)
+    q, k, v = _rand_qkv(rng, B, Hq, Hkv, T, T, Dh, dtype)
+    got = flash_attention_batched(q, k, v, causal=True, block_q=32,
+                                  block_k=32, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("Tq,Tk", [(1, 128), (1, 100), (7, 128)])
+def test_decode_right_aligned(Tq, Tk):
+    rng = np.random.default_rng(Tq + Tk)
+    q, k, v = _rand_qkv(rng, 2, 4, 2, Tq, Tk, 64, jnp.float32)
+    got = flash_attention_batched(q, k, v, causal=True, block_q=32,
+                                  block_k=32, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **TOL[jnp.float32])
+
+
+def test_non_causal():
+    rng = np.random.default_rng(9)
+    q, k, v = _rand_qkv(rng, 1, 2, 2, 64, 80, 32, jnp.float32)
+    got = flash_attention_batched(q, k, v, causal=False, block_q=16,
+                                  block_k=32, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **TOL[jnp.float32])
+
+
+@pytest.mark.parametrize("bq,bk", [(16, 16), (32, 64), (128, 32)])
+def test_block_size_invariance(bq, bk):
+    rng = np.random.default_rng(11)
+    q, k, v = _rand_qkv(rng, 1, 2, 1, 128, 128, 64, jnp.float32)
+    got = flash_attention_batched(q, k, v, causal=True, block_q=bq,
+                                  block_k=bk, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **TOL[jnp.float32])
+
+
+def test_softmax_scale_override():
+    rng = np.random.default_rng(13)
+    q, k, v = _rand_qkv(rng, 1, 1, 1, 32, 32, 16, jnp.float32)
+    got = flash_attention_batched(q, k, v, causal=True, scale=0.5,
+                                  block_q=16, block_k=16, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True, scale=0.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **TOL[jnp.float32])

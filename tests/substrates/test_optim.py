@@ -1,0 +1,97 @@
+"""Optimizer substrate tests: AdamW semantics, clipping, schedules, ZeRO
+spec widening, gradient compression with error feedback."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.optim import (AdamWConfig, adamw_update, compress, decompress,
+                         global_norm, init_adamw, warmup_cosine,
+                         zero_specs)
+
+
+def _params():
+    return {"layer": {"w": jnp.ones((4, 8)), "norm_w": jnp.ones((8,))},
+            "bias": jnp.zeros((8,))}
+
+
+def test_adamw_reduces_quadratic_loss():
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = init_adamw(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, clip_norm=100.0)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    losses = []
+    for _ in range(50):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(cfg, params, g, state)
+        losses.append(float(loss(params)))
+    assert losses[-1] < 1e-2 * losses[0]
+
+
+def test_weight_decay_mask_skips_norms_and_biases():
+    params = _params()
+    state = init_adamw(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=1.0, clip_norm=1e9)
+    zero_grads = jax.tree_util.tree_map(jnp.zeros_like, params)
+    new_params, _, _ = adamw_update(cfg, params, zero_grads, state)
+    # decayed: w shrinks; masked: norm_w and bias unchanged.
+    assert float(jnp.max(jnp.abs(new_params["layer"]["w"]))) < 1.0
+    np.testing.assert_allclose(new_params["layer"]["norm_w"],
+                               params["layer"]["norm_w"])
+    np.testing.assert_allclose(new_params["bias"], params["bias"])
+
+
+def test_clipping_bounds_update():
+    params = {"w": jnp.zeros((3,))}
+    state = init_adamw(params)
+    cfg = AdamWConfig(lr=1.0, weight_decay=0.0, clip_norm=1.0)
+    g = {"w": jnp.asarray([1e6, 0.0, 0.0])}
+    _, _, metrics = adamw_update(cfg, params, g, state)
+    assert float(metrics["grad_norm"]) > 1e5
+    assert float(metrics["clip_scale"]) < 1e-5
+
+
+def test_moments_are_fp32_regardless_of_param_dtype():
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    state = init_adamw(params)
+    assert state.m["w"].dtype == jnp.float32
+    g = {"w": jnp.ones((4,), jnp.bfloat16)}
+    new_p, new_s, _ = adamw_update(AdamWConfig(), params, g, state)
+    assert new_p["w"].dtype == jnp.bfloat16
+    assert new_s.v["w"].dtype == jnp.float32
+
+
+def test_warmup_cosine_shape():
+    s = [float(warmup_cosine(i, warmup_steps=10, total_steps=100))
+         for i in (0, 5, 10, 55, 100)]
+    assert s[0] == 0.0
+    assert 0.4 < s[1] < 0.6
+    np.testing.assert_allclose(s[2], 1.0, rtol=1e-6)
+    assert s[2] > s[3] > s[4] >= 0.1 - 1e-6
+
+
+def test_zero_specs_widen():
+    specs = {"w": P(None, "model"), "b": P("model")}
+    shapes = {"w": jax.ShapeDtypeStruct((64, 128), jnp.float32),
+              "b": jax.ShapeDtypeStruct((128,), jnp.float32)}
+    out = zero_specs(specs, {"data": 16, "model": 16}, shapes)
+    assert out.m["w"] == P("data", "model")   # widened on dim 0 (64 % 16)
+    assert out.m["b"] == P("model")           # nothing to widen
+    assert out.step == P()
+
+
+def test_compression_error_feedback_unbiased():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal(1000), jnp.float32)
+    r = jnp.zeros_like(g)
+    total_deq = jnp.zeros_like(g)
+    # Accumulated (dequantized + residual) equals accumulated gradient.
+    for _ in range(5):
+        q, scale, r = compress(g, r)
+        total_deq = total_deq + decompress(q, scale)
+    np.testing.assert_allclose(np.asarray(total_deq + r),
+                               np.asarray(5 * g), rtol=1e-5, atol=1e-4)
