@@ -4,51 +4,78 @@ Public API:
   * types: Gaussian, LinearizedSSM, FilteringElement, SmoothingElement,
     StateSpaceModel
   * sequential baselines: kalman_filter, rts_smoother, filter_smoother
+    (+ *_batched forms running B lanes in one scan)
   * parallel-in-time: parallel_filter, parallel_smoother,
     parallel_filter_smoother, filtering/smoothing elements + combines
-  * iterated drivers: ieks, ipls, iterated_smoother, IteratedConfig
-  * scan engine: associative_scan, sharded_associative_scan,
-    linear_recurrence_scan
+    (+ *_batched forms fusing B x T elements into one scan per level)
+  * iterated drivers: ieks, ipls, iterated_smoother,
+    iterated_smoother_batched, IteratedConfig (tol>0 enables adaptive
+    early stopping), IterationInfo
+  * scan engine: associative_scan (batch_dims-aware),
+    sharded_associative_scan, linear_recurrence_scan
 """
 from .types import (Gaussian, LinearizedSSM, FilteringElement,
                     SmoothingElement, StateSpaceModel, symmetrize,
                     mvn_logpdf)
 from .sigma_points import cubature, unscented, gauss_hermite, get_scheme
 from .linearization import (linearize_taylor, linearize_slr,
-                            linearize_model_taylor, linearize_model_slr)
-from .sequential import kalman_filter, rts_smoother, filter_smoother
+                            linearize_model_taylor, linearize_model_slr,
+                            linearize_model_taylor_batched,
+                            linearize_model_slr_batched,
+                            broadcast_noise_batched)
+from .sequential import (kalman_filter, rts_smoother, filter_smoother,
+                         kalman_filter_batched, rts_smoother_batched,
+                         filter_smoother_batched)
 from .parallel import (filtering_elements, smoothing_elements,
+                       filtering_elements_batched,
+                       smoothing_elements_batched,
                        filtering_combine, smoothing_combine,
                        filtering_identity, smoothing_identity,
                        parallel_filter, parallel_smoother,
-                       parallel_filter_smoother)
-from .iterated import (IteratedConfig, iterated_smoother, ieks, ipls,
-                       initial_trajectory)
+                       parallel_filter_smoother,
+                       parallel_filter_batched, parallel_smoother_batched,
+                       parallel_filter_smoother_batched)
+from .iterated import (IteratedConfig, IterationInfo, iterated_smoother,
+                       iterated_smoother_batched, ieks, ipls,
+                       initial_trajectory, initial_trajectory_batched)
 from .scan import (associative_scan, sharded_associative_scan,
                    device_exclusive_scan, linear_recurrence_scan,
                    linear_recurrence_combine, LinearRecurrenceElement)
 from .sqrt_parallel import (SqrtFilteringElement, SqrtSmoothingElement,
                             sqrt_filtering_combine, sqrt_smoothing_combine,
                             sqrt_parallel_filter, sqrt_parallel_smoother,
-                            sqrt_parallel_filter_smoother, tria)
+                            sqrt_parallel_filter_smoother,
+                            sqrt_parallel_filter_batched,
+                            sqrt_parallel_smoother_batched,
+                            sqrt_parallel_filter_smoother_batched, tria)
 
 __all__ = [
     "Gaussian", "LinearizedSSM", "FilteringElement", "SmoothingElement",
     "StateSpaceModel", "symmetrize", "mvn_logpdf",
     "cubature", "unscented", "gauss_hermite", "get_scheme",
     "linearize_taylor", "linearize_slr", "linearize_model_taylor",
-    "linearize_model_slr",
+    "linearize_model_slr", "linearize_model_taylor_batched",
+    "linearize_model_slr_batched", "broadcast_noise_batched",
     "kalman_filter", "rts_smoother", "filter_smoother",
-    "filtering_elements", "smoothing_elements", "filtering_combine",
-    "smoothing_combine", "filtering_identity", "smoothing_identity",
+    "kalman_filter_batched", "rts_smoother_batched",
+    "filter_smoother_batched",
+    "filtering_elements", "smoothing_elements",
+    "filtering_elements_batched", "smoothing_elements_batched",
+    "filtering_combine", "smoothing_combine", "filtering_identity",
+    "smoothing_identity",
     "parallel_filter", "parallel_smoother", "parallel_filter_smoother",
-    "IteratedConfig", "iterated_smoother", "ieks", "ipls",
-    "initial_trajectory",
+    "parallel_filter_batched", "parallel_smoother_batched",
+    "parallel_filter_smoother_batched",
+    "IteratedConfig", "IterationInfo", "iterated_smoother",
+    "iterated_smoother_batched", "ieks", "ipls",
+    "initial_trajectory", "initial_trajectory_batched",
     "associative_scan", "sharded_associative_scan", "device_exclusive_scan",
     "linear_recurrence_scan", "linear_recurrence_combine",
     "LinearRecurrenceElement",
     "SqrtFilteringElement", "SqrtSmoothingElement",
     "sqrt_filtering_combine", "sqrt_smoothing_combine",
     "sqrt_parallel_filter", "sqrt_parallel_smoother",
-    "sqrt_parallel_filter_smoother", "tria",
+    "sqrt_parallel_filter_smoother", "sqrt_parallel_filter_batched",
+    "sqrt_parallel_smoother_batched",
+    "sqrt_parallel_filter_smoother_batched", "tria",
 ]

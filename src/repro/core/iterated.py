@@ -1,6 +1,6 @@
 """Iterated smoothers: IEKS (Taylor) and IPLS (sigma-point SLR).
 
-The outer loop (paper §3) repeats M times:
+The outer loop (paper §3) repeats up to M times:
   1. linearize the model around the previous *smoothed* trajectory
      (offline w.r.t. the current pass — this is what admits the scan);
   2. run a filter + smoother pass, either sequential (baseline) or
@@ -10,48 +10,82 @@ IEKS iterations are Gauss-Newton steps on the MAP objective (Bell 1994);
 optional Levenberg-Marquardt damping (Särkkä & Svensson 2020, ref [15])
 augments each measurement with a pseudo-observation of the previous iterate
 with covariance ``(1/lambda) I``.
+
+Iteration count is adaptive (DESIGN.md §Iteration): with ``tol > 0`` the
+fixed-``M`` `lax.scan` is replaced by a `lax.while_loop` that stops once
+the mean update ``max|m_new - m_old|`` falls below ``tol`` (Gauss-Newton
+passes past convergence are pure waste). The batched driver keeps a
+per-trajectory active mask and freezes converged lanes, stopping globally
+when every lane is done. ``tol = 0`` (the default) preserves the exact
+fixed-``M`` path.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from . import parallel, sequential
-from .linearization import linearize_model_slr, linearize_model_taylor
+from .linearization import (linearize_model_slr, linearize_model_slr_batched,
+                            linearize_model_taylor,
+                            linearize_model_taylor_batched)
 from .sigma_points import SigmaScheme, get_scheme
-from .types import Gaussian, LinearizedSSM, StateSpaceModel, broadcast_noise
+from .types import Gaussian, LinearizedSSM, StateSpaceModel
+
+jtm = jax.tree_util.tree_map
 
 
 @dataclasses.dataclass(frozen=True)
 class IteratedConfig:
     method: str = "ekf"             # "ekf" (IEKS) | "slr" (IPLS)
-    n_iter: int = 10                # paper uses M = 10
+    n_iter: int = 10                # paper uses M = 10 (max iters if tol>0)
     parallel: bool = True           # paper's contribution vs. baseline
     sigma_scheme: str = "cubature"  # for method="slr"
     lm_lambda: float = 0.0          # Levenberg-Marquardt damping (0 = off)
-    combine_impl: str = "jnp"       # "jnp" | "pallas"
+    combine_impl: str = "auto"      # "auto" | "jnp" | "fused" | "pallas"
     jitter: float = 0.0
+    tol: float = 0.0                # early-stop mean-delta tol (0 = fixed M)
+
+    def resolved_combine_impl(self, batched: bool) -> str:
+        """"auto" = textbook vmap for single trajectories, the fused
+        batch-vectorized combine for the batched fast path."""
+        if self.combine_impl == "auto":
+            return "fused" if batched else "jnp"
+        return self.combine_impl
+
+
+class IterationInfo(NamedTuple):
+    """Diagnostics of the outer loop: passes executed and the last mean
+    update size (per lane for the batched driver)."""
+
+    iterations: jnp.ndarray
+    final_delta: jnp.ndarray
 
 
 def _augment_lm(lin: LinearizedSSM, prev_means: jnp.ndarray, lam: float
                 ) -> Tuple[LinearizedSSM, jnp.ndarray]:
     """LM damping: pseudo-measurement ``x_k ~ N(prev_mean_k, (1/lam) I)``.
 
-    Returns the augmented model and a function-free augmented measurement
-    array (the caller concatenates the real ys with the pseudo ys).
+    Shape-polymorphic over leading axes (``[n, ...]`` or ``[B, n, ...]``):
+    returns the augmented model and the pseudo measurements (the caller
+    concatenates the real ys with them along the last axis).
     """
-    n, ny, nx = lin.H.shape
+    ny, nx = lin.H.shape[-2:]
+    lead = lin.H.shape[:-2]
     I = jnp.eye(nx, dtype=lin.H.dtype)
-    H_aug = jnp.concatenate([lin.H, jnp.broadcast_to(I, (n, nx, nx))], axis=1)
-    d_aug = jnp.concatenate([lin.d, jnp.zeros((n, nx), lin.d.dtype)], axis=1)
-    R_pad = jnp.zeros((n, ny, nx), lin.Rp.dtype)
-    R_top = jnp.concatenate([lin.Rp, R_pad], axis=2)
-    R_bot = jnp.concatenate([jnp.swapaxes(R_pad, 1, 2),
-                             jnp.broadcast_to(I / lam, (n, nx, nx))], axis=2)
-    Rp_aug = jnp.concatenate([R_top, R_bot], axis=1)
+    H_aug = jnp.concatenate(
+        [lin.H, jnp.broadcast_to(I, lead + (nx, nx))], axis=-2)
+    d_aug = jnp.concatenate(
+        [lin.d, jnp.zeros(lead + (nx,), lin.d.dtype)], axis=-1)
+    R_pad = jnp.zeros(lead + (ny, nx), lin.Rp.dtype)
+    R_top = jnp.concatenate([lin.Rp, R_pad], axis=-1)
+    R_bot = jnp.concatenate(
+        [jnp.swapaxes(R_pad, -1, -2),
+         jnp.broadcast_to(I / lam, lead + (nx, nx))], axis=-1)
+    Rp_aug = jnp.concatenate([R_top, R_bot], axis=-2)
     return LinearizedSSM(F=lin.F, c=lin.c, Qp=lin.Qp,
                          H=H_aug, d=d_aug, Rp=Rp_aug), prev_means
 
@@ -69,14 +103,41 @@ def _one_pass(model: StateSpaceModel, ys: jnp.ndarray, traj: Gaussian,
     ys_eff = ys
     if cfg.lm_lambda > 0.0:
         lin, pseudo = _augment_lm(lin, traj.mean[1:], cfg.lm_lambda)
-        ys_eff = jnp.concatenate([ys, pseudo], axis=1)
+        ys_eff = jnp.concatenate([ys, pseudo], axis=-1)
 
     if cfg.parallel:
         _, smoothed = parallel.parallel_filter_smoother(
-            lin, ys_eff, model.m0, model.P0, combine_impl=cfg.combine_impl)
+            lin, ys_eff, model.m0, model.P0,
+            combine_impl=cfg.resolved_combine_impl(batched=False))
     else:
         _, smoothed = sequential.filter_smoother(lin, ys_eff, model.m0,
                                                  model.P0)
+    return smoothed
+
+
+def _one_pass_batched(model: StateSpaceModel, ys: jnp.ndarray,
+                      traj: Gaussian, cfg: IteratedConfig,
+                      scheme: Optional[SigmaScheme]) -> Gaussian:
+    """One linearize->filter->smooth pass over ``[B, n]`` trajectories."""
+    if cfg.method == "ekf":
+        lin = linearize_model_taylor_batched(model, traj.mean)
+    elif cfg.method == "slr":
+        lin = linearize_model_slr_batched(model, traj, scheme, cfg.jitter)
+    else:
+        raise ValueError(f"unknown method {cfg.method!r}")
+
+    ys_eff = ys
+    if cfg.lm_lambda > 0.0:
+        lin, pseudo = _augment_lm(lin, traj.mean[:, 1:], cfg.lm_lambda)
+        ys_eff = jnp.concatenate([ys, pseudo], axis=-1)
+
+    if cfg.parallel:
+        _, smoothed = parallel.parallel_filter_smoother_batched(
+            lin, ys_eff, model.m0, model.P0,
+            combine_impl=cfg.resolved_combine_impl(batched=True))
+    else:
+        _, smoothed = sequential.filter_smoother_batched(
+            lin, ys_eff, model.m0, model.P0)
     return smoothed
 
 
@@ -87,27 +148,151 @@ def initial_trajectory(model: StateSpaceModel, n: int) -> Gaussian:
     return Gaussian(mean=mean, cov=cov)
 
 
+def initial_trajectory_batched(model: StateSpaceModel, B: int, n: int
+                               ) -> Gaussian:
+    mean = jnp.broadcast_to(model.m0, (B, n + 1) + model.m0.shape)
+    cov = jnp.broadcast_to(model.P0, (B, n + 1) + model.P0.shape)
+    return Gaussian(mean=mean, cov=cov)
+
+
+def _pack_result(traj, hist, info, return_history, return_info):
+    out = (traj,)
+    if return_history:
+        out = out + (hist,)
+    if return_info:
+        out = out + (info,)
+    return out[0] if len(out) == 1 else out
+
+
+def _mean_delta(new: Gaussian, old: Gaussian, lane_axes) -> jnp.ndarray:
+    return jnp.max(jnp.abs(new.mean - old.mean), axis=lane_axes)
+
+
 def iterated_smoother(model: StateSpaceModel, ys: jnp.ndarray,
                       cfg: IteratedConfig = IteratedConfig(),
                       init: Optional[Gaussian] = None,
-                      return_history: bool = False) -> Gaussian:
-    """Run M linearize->filter->smooth passes. Returns the final smoothed
-    trajectory (leading dim n+1); optionally the mean history ``[M, n+1, nx]``.
+                      return_history: bool = False,
+                      return_info: bool = False):
+    """Run up to M linearize->filter->smooth passes.
+
+    Returns the final smoothed trajectory (leading dim n+1); optionally the
+    mean history ``[M, n+1, nx]`` and/or an `IterationInfo`. With
+    ``cfg.tol > 0`` iteration stops once the mean update falls below the
+    tolerance; history rows past the executed passes repeat the final mean.
     """
     n = ys.shape[0]
-    traj = init if init is not None else initial_trajectory(model, n)
+    traj0 = init if init is not None else initial_trajectory(model, n)
     scheme = (get_scheme(cfg.sigma_scheme, model.nx)
               if cfg.method == "slr" else None)
+    M = cfg.n_iter
 
-    def step(carry, _):
-        smoothed = _one_pass(model, ys, carry, cfg, scheme)
-        out = smoothed.mean if return_history else None
-        return smoothed, out
+    if cfg.tol <= 0.0:
+        # Fixed-M path: identical to the paper's M=10 loop.
+        def step(carry, _):
+            smoothed = _one_pass(model, ys, carry, cfg, scheme)
+            delta = _mean_delta(smoothed, carry, None)
+            out = smoothed.mean if return_history else None
+            return smoothed, (out, delta)
 
-    traj, hist = jax.lax.scan(step, traj, None, length=cfg.n_iter)
+        traj, (hist, deltas) = lax.scan(step, traj0, None, length=M)
+        info = IterationInfo(iterations=jnp.asarray(M), final_delta=deltas[-1])
+        return _pack_result(traj, hist, info, return_history, return_info)
+
+    hist0 = (jnp.zeros((M,) + traj0.mean.shape, traj0.mean.dtype)
+             if return_history else jnp.zeros((0,), traj0.mean.dtype))
+    big = jnp.asarray(jnp.inf, traj0.mean.dtype)
+
+    def cond(carry):
+        _, it, delta, _ = carry
+        return (it < M) & (delta > cfg.tol)
+
+    def body(carry):
+        traj, it, _, hist = carry
+        new = _one_pass(model, ys, traj, cfg, scheme)
+        delta = _mean_delta(new, traj, None)
+        if return_history:
+            hist = lax.dynamic_update_index_in_dim(hist, new.mean, it, 0)
+        return new, it + 1, delta, hist
+
+    traj, it, delta, hist = lax.while_loop(
+        cond, body, (traj0, jnp.asarray(0, jnp.int32), big, hist0))
     if return_history:
-        return traj, hist
-    return traj
+        done = jnp.arange(M) < it
+        hist = jnp.where(done[:, None, None], hist, traj.mean[None])
+    info = IterationInfo(iterations=it, final_delta=delta)
+    return _pack_result(traj, hist, info, return_history, return_info)
+
+
+def _freeze_lanes(active: jnp.ndarray, new: Gaussian, old: Gaussian
+                  ) -> Gaussian:
+    """Keep the old trajectory on lanes whose mask is False."""
+    def sel(n, o):
+        mask = active.reshape(active.shape + (1,) * (n.ndim - 1))
+        return jnp.where(mask, n, o)
+    return jtm(sel, new, old)
+
+
+def iterated_smoother_batched(model: StateSpaceModel, ys: jnp.ndarray,
+                              cfg: IteratedConfig = IteratedConfig(),
+                              init: Optional[Gaussian] = None,
+                              return_history: bool = False,
+                              return_info: bool = False):
+    """Batched iterated smoother over ``ys [B, n, ny]``.
+
+    Every pass runs all B trajectories through one fused batched
+    filter+smoother; with ``cfg.tol > 0`` a per-lane active mask freezes
+    converged trajectories (their output stops changing, and
+    ``info.iterations`` records per-lane pass counts) and the loop exits
+    as soon as every lane has converged. Returns ``[B, n+1, ...]``
+    marginals; history is ``[M, B, n+1, nx]``.
+    """
+    B, n = ys.shape[:2]
+    traj0 = init if init is not None else initial_trajectory_batched(
+        model, B, n)
+    scheme = (get_scheme(cfg.sigma_scheme, model.nx)
+              if cfg.method == "slr" else None)
+    M = cfg.n_iter
+
+    if cfg.tol <= 0.0:
+        def step(carry, _):
+            smoothed = _one_pass_batched(model, ys, carry, cfg, scheme)
+            delta = _mean_delta(smoothed, carry, (1, 2))
+            out = smoothed.mean if return_history else None
+            return smoothed, (out, delta)
+
+        traj, (hist, deltas) = lax.scan(step, traj0, None, length=M)
+        info = IterationInfo(iterations=jnp.full((B,), M, jnp.int32),
+                             final_delta=deltas[-1])
+        return _pack_result(traj, hist, info, return_history, return_info)
+
+    hist0 = (jnp.zeros((M,) + traj0.mean.shape, traj0.mean.dtype)
+             if return_history else jnp.zeros((0,), traj0.mean.dtype))
+
+    def cond(carry):
+        _, it, active, _, _, _ = carry
+        return (it < M) & jnp.any(active)
+
+    def body(carry):
+        traj, it, active, iters, delta, hist = carry
+        new = _one_pass_batched(model, ys, traj, cfg, scheme)
+        new = _freeze_lanes(active, new, traj)
+        step_delta = _mean_delta(new, traj, (1, 2))
+        delta = jnp.where(active, step_delta, delta)
+        iters = iters + active.astype(jnp.int32)
+        active = active & (step_delta > cfg.tol)
+        if return_history:
+            hist = lax.dynamic_update_index_in_dim(hist, new.mean, it, 0)
+        return new, it + 1, active, iters, delta, hist
+
+    carry0 = (traj0, jnp.asarray(0, jnp.int32), jnp.ones((B,), bool),
+              jnp.zeros((B,), jnp.int32),
+              jnp.full((B,), jnp.inf, traj0.mean.dtype), hist0)
+    traj, it, _, iters, delta, hist = lax.while_loop(cond, body, carry0)
+    if return_history:
+        done = jnp.arange(M) < it
+        hist = jnp.where(done[:, None, None, None], hist, traj.mean[None])
+    info = IterationInfo(iterations=iters, final_delta=delta)
+    return _pack_result(traj, hist, info, return_history, return_info)
 
 
 def ieks(model, ys, n_iter: int = 10, parallel_mode: bool = True, **kw):

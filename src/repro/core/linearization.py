@@ -87,3 +87,81 @@ def linearize_model_slr(model: StateSpaceModel, traj: Gaussian,
     Q = broadcast_noise(model.Q, n) + Lams
     R = broadcast_noise(model.R, n) + Oms
     return LinearizedSSM(F=Fs, c=cs, Qp=symmetrize(Q), H=Hs, d=ds, Rp=symmetrize(R))
+
+
+# ---------------------------------------------------------------------------
+# Batched linearization: B trajectories, one flattened vmap per map
+# ---------------------------------------------------------------------------
+
+def broadcast_noise_batched(M: jnp.ndarray, B: int, n: int) -> jnp.ndarray:
+    """Broadcast process/measurement noise to a ``[B, n, d, d]`` stack.
+
+    Accepts shared ``[d, d]``, per-step ``[n, d, d]``, or per-lane
+    ``[B, n, d, d]`` (the latter is what serving's time-padding uses to
+    inflate R on padded steps).
+    """
+    M = jnp.asarray(M)
+    if M.ndim == 2:
+        return jnp.broadcast_to(M, (B, n) + M.shape)
+    if M.ndim == 3:
+        if M.shape[0] != n:
+            raise ValueError(f"noise stack has length {M.shape[0]}, "
+                             f"expected {n}")
+        return jnp.broadcast_to(M, (B,) + M.shape)
+    if M.shape[:2] != (B, n):
+        raise ValueError(f"batched noise stack is {M.shape[:2]}, "
+                         f"expected {(B, n)}")
+    return M
+
+
+def _flat_rows(x: jnp.ndarray) -> jnp.ndarray:
+    return x.reshape((-1,) + x.shape[2:])
+
+
+def _unflat_rows(x: jnp.ndarray, B: int, n: int) -> jnp.ndarray:
+    return x.reshape((B, n) + x.shape[1:])
+
+
+def linearize_model_taylor_batched(model: StateSpaceModel,
+                                   traj_means: jnp.ndarray) -> LinearizedSSM:
+    """Taylor-linearize around ``B`` nominal trajectories ``[B, n+1, nx]``.
+
+    All ``B*n`` Jacobians per map come from a single flattened vmap call,
+    so the resulting ``[B, n, ...]`` stacks are contiguous for the batched
+    scan. Returns a `LinearizedSSM` whose leaves carry a leading batch axis.
+    """
+    B, np1 = traj_means.shape[:2]
+    n = np1 - 1
+    lin_f = jax.vmap(lambda m: linearize_taylor(model.f, m))
+    lin_h = jax.vmap(lambda m: linearize_taylor(model.h, m))
+    Fs, cs, _ = lin_f(_flat_rows(traj_means[:, :-1]))
+    Hs, ds, _ = lin_h(_flat_rows(traj_means[:, 1:]))
+    return LinearizedSSM(
+        F=_unflat_rows(Fs, B, n), c=_unflat_rows(cs, B, n),
+        Qp=broadcast_noise_batched(model.Q, B, n),
+        H=_unflat_rows(Hs, B, n), d=_unflat_rows(ds, B, n),
+        Rp=broadcast_noise_batched(model.R, B, n))
+
+
+def linearize_model_slr_batched(model: StateSpaceModel, traj: Gaussian,
+                                scheme: SigmaScheme, jitter: float = 0.0
+                                ) -> LinearizedSSM:
+    """SLR-linearize around ``B`` smoothed trajectories
+    ``traj = Gaussian(means [B, n+1, nx], covs [B, n+1, nx, nx])``."""
+    B, np1 = traj.mean.shape[:2]
+    n = np1 - 1
+    lin_f = jax.vmap(lambda m, P: linearize_slr(model.f, m, P, scheme,
+                                                jitter))
+    lin_h = jax.vmap(lambda m, P: linearize_slr(model.h, m, P, scheme,
+                                                jitter))
+    Fs, cs, Lams = lin_f(_flat_rows(traj.mean[:, :-1]),
+                         _flat_rows(traj.cov[:, :-1]))
+    Hs, ds, Oms = lin_h(_flat_rows(traj.mean[:, 1:]),
+                        _flat_rows(traj.cov[:, 1:]))
+    Q = broadcast_noise_batched(model.Q, B, n) + _unflat_rows(Lams, B, n)
+    R = broadcast_noise_batched(model.R, B, n) + _unflat_rows(Oms, B, n)
+    return LinearizedSSM(
+        F=_unflat_rows(Fs, B, n), c=_unflat_rows(cs, B, n),
+        Qp=symmetrize(Q),
+        H=_unflat_rows(Hs, B, n), d=_unflat_rows(ds, B, n),
+        Rp=symmetrize(R))

@@ -11,9 +11,19 @@ and returns their composition. ``jax.lax.associative_scan`` with
 ``reverse=True`` feeds its operator ``(later_aggregate, earlier_element)``,
 so the driver swaps arguments for reverse scans — callers always write the
 combine in ``(earlier, later)`` form.
+
+Batching contract (DESIGN.md §Batching): element pytrees may carry
+``batch_dims`` leading batch axes *before* the time axis, i.e. leaves are
+``[B..., T, ...]``. The scan runs along the time axis only, but every
+Blelloch level flattens ``[B..., P]`` element pairs into one contiguous
+``[B*...*P]`` batched-combine call, so a fused combine kernel sees
+``B * T/2`` elements per level instead of ``T/2`` — one launch per level
+for the whole fleet of trajectories. The sharded path keeps sharding only
+the time axis; batch axes stay device-local.
 """
 from __future__ import annotations
 
+import math
 from typing import Callable, NamedTuple, Optional
 
 import jax
@@ -26,45 +36,97 @@ from jax import tree_util as jtu
 # Single-device scan with combine-impl dispatch
 # ---------------------------------------------------------------------------
 
-def _batched_combine(combine: Callable, combine_impl: str) -> Callable:
-    """Return an operator over batched element pytrees."""
+def _batched_combine(combine: Callable, combine_impl: str,
+                     total_elems: Optional[int] = None):
+    """Return ``(op, flat_only)``: an operator over batched element
+    pytrees, and whether it handles exactly one flat leading batch axis
+    (vmap/pallas — the driver must flatten extra leading axes) as opposed
+    to broadcasting over arbitrary leading shapes (fused twins).
+
+    ``total_elems`` is the static element count at the call site (B * T for
+    a batched scan). Kernel-vs-reference dispatch is decided *once* from it,
+    so every Blelloch level of one scan takes the same path (trace-stable —
+    see `repro.kernels.kalman_combine.ops.select_impl`).
+    """
     if combine_impl == "jnp":
-        return jax.vmap(combine)
+        return jax.vmap(combine), True
+    if combine_impl == "fused":
+        # Plain-jnp twin of the Pallas kernel math: batch-vectorized with a
+        # shared Gauss-Jordan inverse instead of per-element LAPACK solves.
+        # Unknown combines have no fused twin; fall back to vmap (which
+        # needs the driver's flattening).
+        from repro.kernels.kalman_combine import ops as kc_ops
+        fused = kc_ops.fused_batched_combine_for(combine)
+        if fused is not None:
+            return fused, False
+        return jax.vmap(combine), True
     if combine_impl == "pallas":
         # Late import: kernels depend on core for their reference oracles.
         from repro.kernels.kalman_combine import ops as kc_ops
-        return kc_ops.batched_combine_for(combine)
+        return kc_ops.batched_combine_for(combine,
+                                          total_elems=total_elems), True
     raise ValueError(f"unknown combine_impl {combine_impl!r}")
+
+
+def _flattening_op(batched: Callable, nlead: int) -> Callable:
+    """Wrap a flat-batched operator so it accepts ``nlead`` leading axes.
+
+    Per scan level the operator sees leaves ``[B..., P, ...]`` (batch axes
+    plus the level's pair count); the wrapper collapses the first ``nlead``
+    axes into one contiguous batch for the combine, then restores them.
+    """
+
+    def op(a, b):
+        lead = jtu.tree_leaves(a)[0].shape[:nlead]
+        flat = lambda x: x.reshape((-1,) + x.shape[nlead:])
+        out = batched(jtu.tree_map(flat, a), jtu.tree_map(flat, b))
+        return jtu.tree_map(lambda x: x.reshape(lead + x.shape[1:]), out)
+
+    return op
 
 
 def associative_scan(combine: Callable, elems, *, reverse: bool = False,
                      combine_impl: str = "jnp",
                      axis_name: Optional[str] = None,
-                     identity: Optional[Callable] = None):
-    """Inclusive associative scan over the leading (time) axis of ``elems``.
+                     identity: Optional[Callable] = None,
+                     batch_dims: int = 0):
+    """Inclusive associative scan over the time axis of ``elems``.
 
     Args:
       combine: pair combine in ``(earlier, later)`` order (unbatched).
       reverse: suffix scan (e.g. smoothing) instead of prefix scan.
-      combine_impl: "jnp" (vmap) or "pallas" (TPU kernel / interpret).
+      combine_impl: "jnp" (vmapped textbook combine), "fused" (batch-
+        vectorized jnp twin of the kernel math — the off-TPU fast path for
+        large batched scans), or "pallas" (TPU kernel / interpret).
       axis_name: if set, run the cross-device sharded scan along this bound
         mesh axis (caller must be inside `shard_map`); the time axis of
-        ``elems`` is the per-device shard.
+        ``elems`` is the per-device shard. Batch axes are never sharded.
       identity: zero-arg callable producing the combine's identity element
         (required for the sharded scan).
+      batch_dims: number of leading batch axes before the time axis. All
+        ``B x P`` element pairs of one level run as a single fused
+        batched-combine call.
     """
     if axis_name is not None:
         if identity is None:
             raise ValueError("sharded scan requires an identity element")
         return sharded_associative_scan(
             combine, elems, axis_name=axis_name, identity=identity(),
-            reverse=reverse, combine_impl=combine_impl)
-    batched = _batched_combine(combine, combine_impl)
+            reverse=reverse, combine_impl=combine_impl,
+            batch_dims=batch_dims)
+    lead = jtu.tree_leaves(elems)[0].shape[:batch_dims + 1]
+    batched, flat_only = _batched_combine(combine, combine_impl,
+                                          total_elems=math.prod(lead))
+    if batch_dims and flat_only:
+        # vmap/pallas operate on one flat batch axis; the fused jnp math
+        # broadcasts over arbitrary leading dims, so it skips the reshape
+        # (and its copy) entirely.
+        batched = _flattening_op(batched, batch_dims + 1)
     if reverse:
         op = lambda later_agg, earlier: batched(earlier, later_agg)
     else:
         op = batched
-    return lax.associative_scan(op, elems, reverse=reverse)
+    return lax.associative_scan(op, elems, reverse=reverse, axis=batch_dims)
 
 
 # ---------------------------------------------------------------------------
@@ -108,24 +170,39 @@ def device_exclusive_scan(combine: Callable, agg, *, axis_name: str,
 
 def sharded_associative_scan(combine: Callable, elems, *, axis_name: str,
                              identity, reverse: bool = False,
-                             combine_impl: str = "jnp"):
+                             combine_impl: str = "jnp",
+                             batch_dims: int = 0):
     """Distributed inclusive scan: local Blelloch scan + cross-device
     exclusive scan of per-device aggregates + local fix-up.
 
     Must be called inside `shard_map` with the time axis sharded along
     ``axis_name``. This is the cluster-level form of the paper's method:
-    span O(log n_local + log D).
+    span O(log n_local + log D). With ``batch_dims`` leading batch axes the
+    time axis (axis ``batch_dims``) is still the only sharded one; the
+    aggregate exchange carries the whole batch per device.
     """
     local = associative_scan(combine, elems, reverse=reverse,
-                             combine_impl=combine_impl)
-    take = (lambda x: x[0]) if reverse else (lambda x: x[-1])
-    agg = jtu.tree_map(take, local)
-    excl = device_exclusive_scan(combine, agg, axis_name=axis_name,
+                             combine_impl=combine_impl,
+                             batch_dims=batch_dims)
+    t_index = 0 if reverse else -1
+    agg = jtu.tree_map(
+        lambda x: lax.index_in_dim(x, t_index, axis=batch_dims,
+                                   keepdims=False), local)
+    bcombine = combine
+    for _ in range(batch_dims):
+        bcombine = jax.vmap(bcombine)
+    if batch_dims:
+        batch_shape = jtu.tree_leaves(agg)[0].shape[:batch_dims]
+        identity = jtu.tree_map(
+            lambda x: jnp.broadcast_to(x, batch_shape + x.shape), identity)
+    excl = device_exclusive_scan(bcombine, agg, axis_name=axis_name,
                                  identity=identity, reverse=reverse)
     if reverse:
-        fix = jax.vmap(lambda loc: combine(loc, excl))
+        fix = jax.vmap(lambda loc: bcombine(loc, excl),
+                       in_axes=batch_dims, out_axes=batch_dims)
     else:
-        fix = jax.vmap(lambda loc: combine(excl, loc))
+        fix = jax.vmap(lambda loc: bcombine(excl, loc),
+                       in_axes=batch_dims, out_axes=batch_dims)
     return fix(local)
 
 

@@ -11,7 +11,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from .types import Gaussian, LinearizedSSM, mvn_logpdf, symmetrize
+from .types import (Gaussian, LinearizedSSM, bcast_prior as _bcast_prior,
+                    mvn_logpdf, symmetrize)
 
 
 def kalman_filter(lin: LinearizedSSM, ys: jnp.ndarray, m0: jnp.ndarray,
@@ -87,4 +88,93 @@ def filter_smoother(lin: LinearizedSSM, ys: jnp.ndarray, m0: jnp.ndarray,
     """One sequential filtering+smoothing pass. Smoothed has leading n+1."""
     filtered = kalman_filter(lin, ys, m0, P0)
     smoothed = rts_smoother(lin, filtered, m0, P0)
+    return filtered, smoothed
+
+
+# ---------------------------------------------------------------------------
+# Batched baselines: one time scan carrying B lanes (not an outer vmap, so
+# a batch of trajectories costs one lax.scan dispatch, n steps of [B, ...]
+# vectorized work — the sequential counterpart of the batched fused scan)
+# ---------------------------------------------------------------------------
+
+def _time_major(tree):
+    return jax.tree_util.tree_map(lambda x: jnp.swapaxes(x, 0, 1), tree)
+
+
+def kalman_filter_batched(lin: LinearizedSSM, ys: jnp.ndarray,
+                          m0: jnp.ndarray, P0: jnp.ndarray,
+                          return_loglik: bool = False):
+    """Sequential Kalman filter over ``[B, n]`` trajectories in one scan.
+
+    ``lin`` leaves and ``ys`` carry a leading batch axis; ``m0``/``P0``
+    may be shared or per-lane. Returns filtered ``[B, n, ...]`` (and the
+    per-lane log-likelihood ``[B]`` when requested).
+    """
+    B = ys.shape[0]
+
+    def step(carry, inp):
+        m, P = carry
+        F, c, Qp, H, d, Rp, y = inp
+        m_pred = jnp.einsum("bij,bj->bi", F, m) + c
+        P_pred = symmetrize(
+            jnp.einsum("bij,bjk,blk->bil", F, P, F) + Qp)
+        S = symmetrize(jnp.einsum("bij,bjk,blk->bil", H, P_pred, H) + Rp)
+        innov = y - (jnp.einsum("bij,bj->bi", H, m_pred) + d)
+        K = jnp.swapaxes(
+            jnp.linalg.solve(S, jnp.einsum("bij,bjk->bik", H, P_pred)),
+            -1, -2)
+        m_new = m_pred + jnp.einsum("bij,bj->bi", K, innov)
+        P_new = symmetrize(
+            P_pred - jnp.einsum("bij,bjk,blk->bil", K, S, K))
+        ll = mvn_logpdf(y, jnp.einsum("bij,bj->bi", H, m_pred) + d, S)
+        return (m_new, P_new), (m_new, P_new, ll)
+
+    inputs = _time_major((lin.F, lin.c, lin.Qp, lin.H, lin.d, lin.Rp, ys))
+    init = (_bcast_prior(m0, B, 1), _bcast_prior(P0, B, 2))
+    (_, _), (ms, Ps, lls) = jax.lax.scan(step, init, inputs)
+    out = Gaussian(mean=jnp.swapaxes(ms, 0, 1), cov=jnp.swapaxes(Ps, 0, 1))
+    if return_loglik:
+        return out, jnp.sum(lls, axis=0)
+    return out
+
+
+def rts_smoother_batched(lin: LinearizedSSM, filtered: Gaussian,
+                         m0: jnp.ndarray, P0: jnp.ndarray) -> Gaussian:
+    """Sequential RTS smoother over ``[B, n]`` lanes in one reverse scan."""
+    B = filtered.mean.shape[0]
+    m0b = _bcast_prior(m0, B, 1)
+    P0b = _bcast_prior(P0, B, 2)
+    ms_f = jnp.concatenate([m0b[:, None], filtered.mean[:, :-1]], axis=1)
+    Ps_f = jnp.concatenate([P0b[:, None], filtered.cov[:, :-1]], axis=1)
+
+    def step(carry, inp):
+        m_next_s, P_next_s = carry
+        m_f, P_f, F, c, Qp = inp
+        m_pred = jnp.einsum("bij,bj->bi", F, m_f) + c
+        P_pred = symmetrize(
+            jnp.einsum("bij,bjk,blk->bil", F, P_f, F) + Qp)
+        G = jnp.swapaxes(
+            jnp.linalg.solve(P_pred, jnp.einsum("bij,bjk->bik", F, P_f)),
+            -1, -2)
+        m_s = m_f + jnp.einsum("bij,bj->bi", G, m_next_s - m_pred)
+        P_s = symmetrize(
+            P_f + jnp.einsum("bij,bjk,blk->bil", G, P_next_s - P_pred, G))
+        return (m_s, P_s), (m_s, P_s)
+
+    init = (filtered.mean[:, -1], filtered.cov[:, -1])
+    inputs = _time_major((ms_f, Ps_f, lin.F, lin.c, lin.Qp))
+    (_, _), (ms_s, Ps_s) = jax.lax.scan(step, init, inputs, reverse=True)
+    mean = jnp.concatenate([jnp.swapaxes(ms_s, 0, 1),
+                            filtered.mean[:, -1:]], axis=1)
+    cov = jnp.concatenate([jnp.swapaxes(Ps_s, 0, 1),
+                           filtered.cov[:, -1:]], axis=1)
+    return Gaussian(mean=mean, cov=cov)
+
+
+def filter_smoother_batched(lin: LinearizedSSM, ys: jnp.ndarray,
+                            m0: jnp.ndarray, P0: jnp.ndarray
+                            ) -> Tuple[Gaussian, Gaussian]:
+    """One batched sequential pass. Smoothed has shape ``[B, n+1, ...]``."""
+    filtered = kalman_filter_batched(lin, ys, m0, P0)
+    smoothed = rts_smoother_batched(lin, filtered, m0, P0)
     return filtered, smoothed

@@ -31,7 +31,8 @@ import jax.numpy as jnp
 from jax.scipy.linalg import solve_triangular
 
 from . import scan as scan_lib
-from .types import Gaussian, LinearizedSSM, symmetrize
+from .types import (Gaussian, LinearizedSSM, bcast_prior as _bcast_prior,
+                    symmetrize)
 
 
 class SqrtFilteringElement(NamedTuple):
@@ -204,25 +205,27 @@ def sqrt_parallel_filter(lin: LinearizedSSM, ys, m0, P0, *,
     return Gaussian(mean=scanned.b, cov=cov)
 
 
+def _generic_sqrt_smoothing_element(mf, Pf, F, c, LQk
+                                    ) -> SqrtSmoothingElement:
+    nx = mf.shape[-1]
+    Uf = jnp.linalg.cholesky(symmetrize(Pf))
+    top = jnp.concatenate([F @ Uf, LQk], axis=-1)
+    bot = jnp.concatenate([Uf, jnp.zeros((nx, nx), mf.dtype)], axis=-1)
+    Phi = tria(jnp.concatenate([top, bot], axis=0))
+    Phi11 = Phi[:nx, :nx]
+    Phi21 = Phi[nx:, :nx]
+    D = Phi[nx:, nx:]
+    E = Phi21 @ jnp.linalg.inv(Phi11)
+    g = mf - E @ (F @ mf + c)
+    return SqrtSmoothingElement(E=E, g=g, D=D)
+
+
 def sqrt_smoothing_elements(lin: LinearizedSSM, filtered: Gaussian
                             ) -> SqrtSmoothingElement:
     LQ = jnp.linalg.cholesky(symmetrize(lin.Qp))
-
-    def generic(mf, Pf, F, c, LQk):
-        nx = mf.shape[-1]
-        Uf = jnp.linalg.cholesky(symmetrize(Pf))
-        top = jnp.concatenate([F @ Uf, LQk], axis=-1)
-        bot = jnp.concatenate([Uf, jnp.zeros((nx, nx), mf.dtype)], axis=-1)
-        Phi = tria(jnp.concatenate([top, bot], axis=0))
-        Phi11 = Phi[:nx, :nx]
-        Phi21 = Phi[nx:, :nx]
-        D = Phi[nx:, nx:]
-        E = Phi21 @ jnp.linalg.inv(Phi11)
-        g = mf - E @ (F @ mf + c)
-        return SqrtSmoothingElement(E=E, g=g, D=D)
-
-    body = jax.vmap(generic)(filtered.mean[:-1], filtered.cov[:-1],
-                             lin.F[1:], lin.c[1:], LQ[1:])
+    body = jax.vmap(_generic_sqrt_smoothing_element)(
+        filtered.mean[:-1], filtered.cov[:-1],
+        lin.F[1:], lin.c[1:], LQ[1:])
     nx = filtered.mean.shape[-1]
     last = SqrtSmoothingElement(
         E=jnp.zeros((nx, nx), filtered.mean.dtype),
@@ -254,4 +257,94 @@ def sqrt_parallel_filter_smoother(lin: LinearizedSSM, ys, m0, P0
                                   ) -> Tuple[Gaussian, Gaussian]:
     filtered = sqrt_parallel_filter(lin, ys, m0, P0)
     smoothed = sqrt_parallel_smoother(lin, filtered, m0, P0)
+    return filtered, smoothed
+
+
+# ---------------------------------------------------------------------------
+# Batched drivers (batch axis before time; one fused scan per level)
+# ---------------------------------------------------------------------------
+
+def sqrt_filtering_elements_batched(lin: LinearizedSSM, ys, m0, P0
+                                    ) -> SqrtFilteringElement:
+    """All ``B x n`` square-root filtering elements: one flattened vmap for
+    the generic rows, the k=1 case written in-batch into row 0."""
+    B, n = ys.shape[:2]
+    LQ = jnp.linalg.cholesky(symmetrize(lin.Qp))
+    LR = jnp.linalg.cholesky(symmetrize(lin.Rp))
+    LP0 = jnp.linalg.cholesky(symmetrize(_bcast_prior(P0, B, 2)))
+    flat = lambda x: x.reshape((B * n,) + x.shape[2:])
+    generic = jax.vmap(_generic_sqrt_element)(
+        flat(lin.F), flat(lin.c), flat(LQ), flat(lin.H), flat(lin.d),
+        flat(LR), flat(ys))
+    generic = jax.tree_util.tree_map(
+        lambda x: x.reshape((B, n) + x.shape[1:]), generic)
+    first = jax.vmap(_first_sqrt_element)(
+        (lin.F[:, 0], lin.c[:, 0], LQ[:, 0], lin.H[:, 0], lin.d[:, 0],
+         LR[:, 0]), ys[:, 0], _bcast_prior(m0, B, 1), LP0)
+    return jax.tree_util.tree_map(
+        lambda g, f: g.at[:, 0].set(f), generic, first)
+
+
+def sqrt_parallel_filter_batched(lin: LinearizedSSM, ys, m0, P0, *,
+                                 axis_name=None) -> Gaussian:
+    elems = sqrt_filtering_elements_batched(lin, ys, m0, P0)
+    scanned = scan_lib.associative_scan(
+        sqrt_filtering_combine, elems, reverse=False, axis_name=axis_name,
+        batch_dims=1,
+        identity=lambda: sqrt_filtering_identity(lin.F.shape[-1],
+                                                 lin.F.dtype))
+    cov = scanned.U @ jnp.swapaxes(scanned.U, -1, -2)
+    return Gaussian(mean=scanned.b, cov=cov)
+
+
+def sqrt_smoothing_elements_batched(lin: LinearizedSSM, filtered: Gaussian
+                                    ) -> SqrtSmoothingElement:
+    B, n = filtered.mean.shape[:2]
+    nx = filtered.mean.shape[-1]
+    LQ = jnp.linalg.cholesky(symmetrize(lin.Qp))
+    flat = lambda x: x.reshape((B * (n - 1),) + x.shape[2:])
+    body = jax.vmap(_generic_sqrt_smoothing_element)(
+        flat(filtered.mean[:, :-1]), flat(filtered.cov[:, :-1]),
+        flat(lin.F[:, 1:]), flat(lin.c[:, 1:]), flat(LQ[:, 1:]))
+    body = jax.tree_util.tree_map(
+        lambda x: x.reshape((B, n - 1) + x.shape[1:]), body)
+    last = SqrtSmoothingElement(
+        E=jnp.zeros((B, nx, nx), filtered.mean.dtype),
+        g=filtered.mean[:, -1],
+        D=jnp.linalg.cholesky(symmetrize(filtered.cov[:, -1])))
+    return jax.tree_util.tree_map(
+        lambda b, l: jnp.concatenate([b, l[:, None]], axis=1), body, last)
+
+
+def sqrt_parallel_smoother_batched(lin: LinearizedSSM, filtered: Gaussian,
+                                   m0, P0, *, axis_name=None) -> Gaussian:
+    B = filtered.mean.shape[0]
+    elems = sqrt_smoothing_elements_batched(lin, filtered)
+    scanned = scan_lib.associative_scan(
+        sqrt_smoothing_combine, elems, reverse=True, axis_name=axis_name,
+        batch_dims=1,
+        identity=lambda: sqrt_smoothing_identity(lin.F.shape[-1],
+                                                 lin.F.dtype))
+    means = scanned.g
+    covs = scanned.D @ jnp.swapaxes(scanned.D, -1, -2)
+
+    def x0_step(F, c, Qp, m0k, P0k, m1_s, P1_s):
+        P_pred = symmetrize(F @ P0k @ F.T + Qp)
+        G = jnp.linalg.solve(P_pred, F @ P0k).T
+        m0_s = m0k + G @ (m1_s - (F @ m0k + c))
+        P0_s = symmetrize(P0k + G @ (P1_s - P_pred) @ G.T)
+        return m0_s, P0_s
+
+    m0_s, P0_s = jax.vmap(x0_step)(
+        lin.F[:, 0], lin.c[:, 0], lin.Qp[:, 0],
+        _bcast_prior(m0, B, 1), _bcast_prior(P0, B, 2),
+        means[:, 0], covs[:, 0])
+    return Gaussian(mean=jnp.concatenate([m0_s[:, None], means], axis=1),
+                    cov=jnp.concatenate([P0_s[:, None], covs], axis=1))
+
+
+def sqrt_parallel_filter_smoother_batched(lin: LinearizedSSM, ys, m0, P0
+                                          ) -> Tuple[Gaussian, Gaussian]:
+    filtered = sqrt_parallel_filter_batched(lin, ys, m0, P0)
+    smoothed = sqrt_parallel_smoother_batched(lin, filtered, m0, P0)
     return filtered, smoothed

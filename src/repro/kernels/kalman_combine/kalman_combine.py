@@ -25,49 +25,24 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-
-def _bmm(A: jnp.ndarray, B: jnp.ndarray) -> jnp.ndarray:
-    """Batched (tiny) matmul as broadcast-mul-reduce: [TB,n,m]@[TB,m,p]."""
-    return jnp.sum(A[..., :, :, None] * B[..., None, :, :], axis=-2)
-
-
-def _bmv(A: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
-    """Batched matvec: [TB,n,m] @ [TB,m] -> [TB,n]."""
-    return jnp.sum(A * x[..., None, :], axis=-1)
+# Shared batched-tiny-linalg primitives (also used by the plain-jnp fast
+# paths in repro.core): last-axis-reduce matmuls and the no-pivot
+# Gauss-Jordan elimination, both Mosaic-compatible.
+from repro.core.types import bmm as _bmm, bmv as _bmv, \
+    gauss_jordan_inverse as _gauss_jordan_inverse
 
 
 def _bt(A: jnp.ndarray) -> jnp.ndarray:
     return jnp.swapaxes(A, -1, -2)
 
 
-def _gauss_jordan_inverse(W: jnp.ndarray) -> jnp.ndarray:
-    """Batched inverse of [TB, n, n] via Gauss-Jordan, unrolled over n.
-
-    No pivoting: callers guarantee ``W = I + (PSD)(PSD)`` whose eigenvalues
-    have real part >= 1, keeping the elimination well conditioned.
-    """
-    n = W.shape[-1]
-    eye = jnp.eye(n, dtype=W.dtype)
-    aug = jnp.concatenate(
-        [W, jnp.broadcast_to(eye, W.shape[:-2] + (n, n))], axis=-1)
-    row_ids = jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0)
-    for k in range(n):
-        pivot_row = aug[..., k:k + 1, :] / aug[..., k:k + 1, k:k + 1]
-        factors = aug[..., :, k:k + 1]
-        eliminated = aug - factors * pivot_row
-        aug = jnp.where(row_ids == k, pivot_row, eliminated)
-    return aug[..., :, n:]
-
-
 # ---------------------------------------------------------------------------
 # Filtering combine (Eq. 15)
 # ---------------------------------------------------------------------------
 
-def _filtering_kernel(Ai, bi, Ci, etai, Ji, Aj, bj, Cj, etaj, Jj,
-                      Ao, bo, Co, etao, Jo):
-    ai, bi_, ci, ei, ji = Ai[...], bi[...], Ci[...], etai[...], Ji[...]
-    aj, bj_, cj, ej, jj = Aj[...], bj[...], Cj[...], etaj[...], Jj[...]
-
+def filtering_combine_math(ai, bi, ci, ei, ji, aj, bj, cj, ej, jj):
+    """Eq. 15 on batched arrays ``[..., nx(, nx)]``: the kernel body, also
+    usable as a plain-jnp fused combine (no per-matrix LAPACK calls)."""
     # W = (I + C_i J_j)^T = I + J_j C_i ; one inverse serves all solves.
     n = ai.shape[-1]
     eye = jnp.eye(n, dtype=ai.dtype)
@@ -76,28 +51,59 @@ def _filtering_kernel(Ai, bi, Ci, etai, Ji, Aj, bj, Cj, etaj, Jj,
     # (I + C_i J_j)^{-1} = Winv^T
     X = _bmm(aj, _bt(Winv))                      # A_j (I + C_i J_j)^{-1}
 
-    Ao[...] = _bmm(X, ai)
-    bo[...] = _bmv(X, bi_ + _bmv(ci, ej)) + bj_
+    A = _bmm(X, ai)
+    b = _bmv(X, bi + _bmv(ci, ej)) + bj
     Cnew = _bmm(_bmm(X, ci), _bt(aj)) + cj
-    Co[...] = 0.5 * (Cnew + _bt(Cnew))
-    z = _bmv(Winv, ej - _bmv(jj, bi_))           # (I + J_j C_i)^{-1} (...)
-    etao[...] = _bmv(_bt(ai), z) + ei
+    C = 0.5 * (Cnew + _bt(Cnew))
+    z = _bmv(Winv, ej - _bmv(jj, bi))            # (I + J_j C_i)^{-1} (...)
+    eta = _bmv(_bt(ai), z) + ei
     ZJ = _bmm(Winv, _bmm(jj, ai))
     Jnew = _bmm(_bt(ai), ZJ) + ji
-    Jo[...] = 0.5 * (Jnew + _bt(Jnew))
+    J = 0.5 * (Jnew + _bt(Jnew))
+    return A, b, C, eta, J
+
+
+def _filtering_kernel(Ai, bi, Ci, etai, Ji, Aj, bj, Cj, etaj, Jj,
+                      Ao, bo, Co, etao, Jo):
+    outs = filtering_combine_math(
+        Ai[...], bi[...], Ci[...], etai[...], Ji[...],
+        Aj[...], bj[...], Cj[...], etaj[...], Jj[...])
+    Ao[...], bo[...], Co[...], etao[...], Jo[...] = outs
+
+
+def filtering_combine_batched_jnp(ei, ej):
+    """Fused batched Eq. 15 combine in plain jnp — the CPU/GPU fast path.
+
+    Same algebra as the Pallas kernel (one shared Gauss-Jordan inverse for
+    all four solve sites) over any leading batch shape. This is what the
+    batched multi-trajectory scan uses off-TPU: a vmapped textbook combine
+    would issue one LAPACK solve per element pair, which dominates at
+    B*T-sized levels.
+    """
+    return type(ei)(*filtering_combine_math(*ei, *ej))
 
 
 # ---------------------------------------------------------------------------
 # Smoothing combine (Eq. 19)
 # ---------------------------------------------------------------------------
 
-def _smoothing_kernel(Ei, gi, Li, Ej, gj, Lj, Eo, go, Lo):
-    ei, gi_, li = Ei[...], gi[...], Li[...]
-    ej, gj_, lj = Ej[...], gj[...], Lj[...]
-    Eo[...] = _bmm(ei, ej)
-    go[...] = _bmv(ei, gj_) + gi_
+def smoothing_combine_math(ei, gi, li, ej, gj, lj):
+    """Eq. 19 on batched arrays (kernel body / plain-jnp fused combine)."""
+    E = _bmm(ei, ej)
+    g = _bmv(ei, gj) + gi
     Lnew = _bmm(_bmm(ei, lj), _bt(ei)) + li
-    Lo[...] = 0.5 * (Lnew + _bt(Lnew))
+    L = 0.5 * (Lnew + _bt(Lnew))
+    return E, g, L
+
+
+def _smoothing_kernel(Ei, gi, Li, Ej, gj, Lj, Eo, go, Lo):
+    Eo[...], go[...], Lo[...] = smoothing_combine_math(
+        Ei[...], gi[...], Li[...], Ej[...], gj[...], Lj[...])
+
+
+def smoothing_combine_batched_jnp(ei, ej):
+    """Fused batched Eq. 19 combine in plain jnp (see filtering twin)."""
+    return type(ei)(*smoothing_combine_math(*ei, *ej))
 
 
 def _block_specs(num_fields, nx, tb):

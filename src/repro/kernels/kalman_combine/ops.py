@@ -2,14 +2,26 @@
 
 Dispatch policy:
   * TPU backend -> compiled Pallas (Mosaic) kernel;
-  * other backends -> the same kernel in interpret mode for small batches,
+  * other backends -> the same kernel in interpret mode for large batches,
     or the jnp reference for tiny inputs where kernel overhead dominates.
+
+The kernel-vs-reference choice is **trace-stable**: it is made once per
+call site from the *total* element count of the scan (`select_impl`), not
+from the per-level batch size. Inside a Blelloch scan the pair count halves
+every level, so a per-level policy would flip implementations mid-scan and
+retrace the Pallas kernel for every level that crosses the threshold; a
+static per-call-site decision keeps one implementation (and one trace) for
+the whole scan.
 
 `batched_combine_for` adapts a *scalar* core combine (as passed to
 `repro.core.scan.associative_scan`) to its fused batched kernel — this is
-the hook `combine_impl="pallas"` uses.
+the hook `combine_impl="pallas"` uses; the scan driver passes the static
+total element count down.
 """
 from __future__ import annotations
+
+import functools
+from typing import Optional
 
 import jax
 
@@ -25,27 +37,68 @@ def _use_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def filtering_combine_op(ei, ej, *, tile: int = 512):
+def select_impl(total_elems: Optional[int]) -> str:
+    """Static policy: "kernel" or "ref" from the call site's element count.
+
+    ``total_elems`` is the number of elements entering the scan (B * T for
+    a batched scan), a Python int known at trace time — never a per-level
+    pair count. ``None`` (unknown) defaults to the kernel path.
+    """
+    if total_elems is not None and total_elems < _MIN_KERNEL_BATCH:
+        return "ref"
+    return "kernel"
+
+
+def filtering_combine_op(ei, ej, *, tile: int = 512, impl: str = "auto"):
     B = ei.b.shape[0]
-    if B < _MIN_KERNEL_BATCH:
+    if impl == "auto":
+        impl = select_impl(B)
+    # B == 0 happens on degenerate scan levels (lax.associative_scan slices
+    # can be empty); pallas_call rejects a zero grid, the vmap ref is a
+    # no-op there. Static shape, so this never flips within a trace.
+    if impl == "ref" or B == 0:
         return _ref.filtering_combine_batched_ref(ei, ej)
     return _k.filtering_combine_batched(ei, ej, tile=tile,
                                         interpret=_use_interpret())
 
 
-def smoothing_combine_op(ei, ej, *, tile: int = 512):
+def smoothing_combine_op(ei, ej, *, tile: int = 512, impl: str = "auto"):
     B = ei.g.shape[0]
-    if B < _MIN_KERNEL_BATCH:
+    if impl == "auto":
+        impl = select_impl(B)
+    if impl == "ref" or B == 0:
         return _ref.smoothing_combine_batched_ref(ei, ej)
     return _k.smoothing_combine_batched(ei, ej, tile=tile,
                                         interpret=_use_interpret())
 
 
-def batched_combine_for(combine):
-    """Map a core combine fn to its fused batched kernel."""
+def batched_combine_for(combine, total_elems: Optional[int] = None):
+    """Map a core combine fn to its fused batched kernel.
+
+    The returned operator is pinned to one implementation chosen from
+    ``total_elems`` (see `select_impl`), so every level of the enclosing
+    scan dispatches identically.
+    """
+    impl = select_impl(total_elems)
     if combine is filtering_combine:
-        return filtering_combine_op
+        return functools.partial(filtering_combine_op, impl=impl)
     if combine is smoothing_combine:
-        return smoothing_combine_op
+        return functools.partial(smoothing_combine_op, impl=impl)
     # Unknown combine: fall back to vmap (e.g. user-supplied operators).
     return jax.vmap(combine)
+
+
+def fused_batched_combine_for(combine):
+    """Map a core combine fn to its plain-jnp fused twin (no Pallas, no
+    per-matrix LAPACK) — the off-TPU fast path for batched scans.
+
+    Returns ``None`` for unknown combines: fused twins broadcast over
+    arbitrary leading axes, which a per-element user combine cannot be
+    assumed to do, so the scan driver must fall back to its vmap path
+    (with flattening) instead.
+    """
+    if combine is filtering_combine:
+        return _k.filtering_combine_batched_jnp
+    if combine is smoothing_combine:
+        return _k.smoothing_combine_batched_jnp
+    return None

@@ -1,21 +1,36 @@
-"""Serving driver: batched prefill + decode loop with KV/SSM caches.
+"""Serving driver: two workloads behind one CLI.
 
-    python -m repro.launch.serve --arch qwen2-1.5b --batch 4 \
-        --prompt-len 32 --gen 16 [--mesh 1x1]
+``decode``   — batched LLM prefill + decode loop with KV/SSM caches:
+
+    python -m repro.launch.serve --workload decode --arch qwen2-1.5b \
+        --batch 4 --prompt-len 32 --gen 16
+
+``smoother`` — batched state-estimation service (DESIGN.md §Serving): a
+fleet of smoothing requests with heterogeneous trajectory lengths is
+bucketed by (padded n, nx), padded along time with uninformative
+measurements (R inflated by ``R_PAD_SCALE`` so padded steps carry no
+information) and along batch by replication, then each bucket runs as ONE
+batched iterated smoother call — B trajectories per fused scan level:
+
+    python -m repro.launch.serve --workload smoother --requests 64 \
+        --n 512 --max-batch 64 --tol 1e-6
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import time
-from typing import Optional
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.configs import get_config, reduced_config
-from repro.models import (decode_step, encode, init_caches, init_model)
 
+# ---------------------------------------------------------------------------
+# Decode workload (LLM serving)
+# ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
 class ServeConfig:
@@ -31,6 +46,9 @@ class ServeConfig:
 
 
 def serve(serve_cfg: ServeConfig, emit=print) -> dict:
+    from repro.configs import get_config, reduced_config
+    from repro.models import decode_step, encode, init_caches, init_model
+
     cfg = get_config(serve_cfg.arch)
     if serve_cfg.reduced:
         cfg = reduced_config(cfg)
@@ -75,17 +93,189 @@ def serve(serve_cfg: ServeConfig, emit=print) -> dict:
     return {"tokens": out_tokens, "tok_per_s": B * total / dt}
 
 
+# ---------------------------------------------------------------------------
+# Smoother workload (batched state-estimation service)
+# ---------------------------------------------------------------------------
+
+R_PAD_SCALE = 1e8  # measurement-noise inflation on padded time steps
+
+
+@dataclasses.dataclass
+class SmootherServeConfig:
+    requests: int = 64
+    n: int = 512             # maximum trajectory length in the request mix
+    max_batch: int = 64      # bucket launch width
+    method: str = "ekf"      # "ekf" | "slr"
+    n_iter: int = 10
+    tol: float = 1e-6        # 0 disables early stopping
+    parallel: bool = True
+    lm_lambda: float = 1.0   # damping; undamped GN diverges on long tracks
+    vary_lengths: bool = True
+    seed: int = 0
+    f64: bool = True         # covariance form is f32-fragile at long n
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << (int(n) - 1).bit_length()
+
+
+class SmootherServer:
+    """Bucketed batched smoothing service over one state-space model.
+
+    Requests (``ys [n_i, ny]``) are grouped by ``(next_pow2(n_i), nx)``;
+    inside a bucket the time axis is padded to the bucket length with
+    zero measurements whose per-step R is inflated by ``R_PAD_SCALE``
+    (an exactly-uninformative update up to float error, so real-step
+    posteriors are unchanged), and the batch axis is padded by replication
+    to the launch width. Each (B, n) signature jit-caches one batched
+    iterated-smoother executable.
+    """
+
+    def __init__(self, model, cfg: SmootherServeConfig):
+        from repro.core import IteratedConfig, iterated_smoother_batched
+
+        self.model = model
+        self.cfg = cfg
+        self._icfg = IteratedConfig(
+            method=cfg.method, n_iter=cfg.n_iter, tol=cfg.tol,
+            parallel=cfg.parallel, lm_lambda=cfg.lm_lambda)
+
+        def run(ys, r_stack):
+            model_b = dataclasses.replace(self.model, R=r_stack)
+            return iterated_smoother_batched(model_b, ys, self._icfg,
+                                             return_info=True)
+
+        self._run = jax.jit(run)
+
+    def _pad_bucket(self, batch: List[np.ndarray], n_pad: int, b_pad: int
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        ny = self.model.ny
+        R = np.asarray(self.model.R)
+        dtype = R.dtype
+        ys = np.zeros((b_pad, n_pad, ny), dtype)
+        rs = np.broadcast_to(R * R_PAD_SCALE, (b_pad, n_pad, ny, ny)).copy()
+        for i, y in enumerate(batch):
+            ys[i, :len(y)] = y
+            rs[i, :len(y)] = R
+        for i in range(len(batch), b_pad):       # batch padding: replicate
+            ys[i] = ys[0]
+            rs[i] = rs[0]
+        return jnp.asarray(ys), jnp.asarray(rs)
+
+    def smooth_batch(self, batch: List[np.ndarray], n_pad: int, b_pad: int):
+        """Run one padded bucket launch; returns per-request trajectories
+        (list of ``[n_i + 1, nx]`` means) and the per-lane iteration info."""
+        ys, rs = self._pad_bucket(batch, n_pad, b_pad)
+        traj, info = self._run(ys, rs)
+        jax.block_until_ready(traj.mean)
+        means = [np.asarray(traj.mean[i, :len(y) + 1])
+                 for i, y in enumerate(batch)]
+        return means, info
+
+    def serve_requests(self, requests: List[np.ndarray], emit=print) -> dict:
+        """Bucket, pad, and smooth a full request list; returns stats."""
+        buckets: Dict[int, List[int]] = defaultdict(list)
+        for idx, ys in enumerate(requests):
+            buckets[_next_pow2(len(ys))].append(idx)
+
+        results: List[Optional[np.ndarray]] = [None] * len(requests)
+        launches = 0
+        iters_total = 0
+        t0 = time.perf_counter()
+        for n_pad in sorted(buckets):
+            idxs = buckets[n_pad]
+            for lo in range(0, len(idxs), self.cfg.max_batch):
+                chunk = idxs[lo:lo + self.cfg.max_batch]
+                b_pad = (self.cfg.max_batch
+                         if len(idxs) > self.cfg.max_batch else len(chunk))
+                means, info = self.smooth_batch(
+                    [requests[i] for i in chunk], n_pad, b_pad)
+                for i, m in zip(chunk, means):
+                    results[i] = m
+                launches += 1
+                iters_total += int(np.sum(np.asarray(
+                    info.iterations)[:len(chunk)]))
+        dt = time.perf_counter() - t0
+        stats = {
+            "results": results,
+            "requests": len(requests),
+            "launches": launches,
+            "mean_iterations": iters_total / max(len(requests), 1),
+            "wall_s": dt,
+            "traj_per_s": len(requests) / dt,
+        }
+        emit(f"[serve/smoother] {len(requests)} requests in {launches} "
+             f"bucket launches, {dt:.2f}s ({stats['traj_per_s']:.1f} traj/s,"
+             f" {stats['mean_iterations']:.1f} mean iters)")
+        return stats
+
+
+def serve_smoother(cfg: SmootherServeConfig, emit=print) -> dict:
+    """Generate a synthetic coordinated-turn request fleet and serve it."""
+    from repro.data import (CoordinatedTurnConfig,
+                            make_coordinated_turn_model, simulate_trajectory)
+
+    dtype = jnp.float64 if cfg.f64 else jnp.float32
+    if cfg.f64:
+        jax.config.update("jax_enable_x64", True)
+    model = make_coordinated_turn_model(CoordinatedTurnConfig(), dtype=dtype)
+
+    # A small set of distinct lengths keeps request generation cheap while
+    # still exercising the (n, nx) bucketing + padding path.
+    lengths = ([max(cfg.n // 2, 2), max((3 * cfg.n) // 4, 2), cfg.n]
+               if cfg.vary_lengths else [cfg.n])
+    rng = np.random.default_rng(cfg.seed)
+    requests, truths = [], []
+    for i in range(cfg.requests):
+        n_i = int(lengths[int(rng.integers(len(lengths)))])
+        xs, ys = simulate_trajectory(model, n_i,
+                                     jax.random.PRNGKey(cfg.seed + i))
+        requests.append(np.asarray(ys))
+        truths.append(np.asarray(xs))
+
+    server = SmootherServer(model, cfg)
+    stats = server.serve_requests(requests, emit=emit)
+
+    # Sanity: served estimates must actually track the simulated truth.
+    rmses = [float(np.sqrt(np.mean((m[1:, :2] - t[1:, :2]) ** 2)))
+             for m, t in zip(stats["results"], truths)]
+    stats["mean_rmse"] = float(np.mean(rmses)) if rmses else None
+    if rmses:
+        emit(f"[serve/smoother] mean position RMSE {stats['mean_rmse']:.4f}")
+    return stats
+
+
 def main(argv=None):
     p = argparse.ArgumentParser()
-    p.add_argument("--arch", required=True)
+    p.add_argument("--workload", choices=("decode", "smoother"),
+                   default="decode")
+    p.add_argument("--arch", default=None, help="decode: model architecture")
     p.add_argument("--batch", type=int, default=4)
     p.add_argument("--prompt-len", type=int, default=32)
     p.add_argument("--gen", type=int, default=16)
     p.add_argument("--reduced", action="store_true", default=True)
+    p.add_argument("--requests", type=int, default=64)
+    p.add_argument("--n", type=int, default=512)
+    p.add_argument("--max-batch", type=int, default=64)
+    p.add_argument("--method", choices=("ekf", "slr"), default="ekf")
+    p.add_argument("--iters", type=int, default=10)
+    p.add_argument("--tol", type=float, default=1e-6)
+    p.add_argument("--sequential", action="store_true",
+                   help="smoother: use the sequential baseline pass")
+    p.add_argument("--f32", action="store_true",
+                   help="smoother: run in float32")
     args = p.parse_args(argv)
-    serve(ServeConfig(arch=args.arch, batch=args.batch,
-                      prompt_len=args.prompt_len, gen=args.gen,
-                      reduced=args.reduced))
+    if args.workload == "smoother":
+        serve_smoother(SmootherServeConfig(
+            requests=args.requests, n=args.n, max_batch=args.max_batch,
+            method=args.method, n_iter=args.iters, tol=args.tol,
+            parallel=not args.sequential, f64=not args.f32))
+    else:
+        if args.arch is None:
+            p.error("--arch is required for the decode workload")
+        serve(ServeConfig(arch=args.arch, batch=args.batch,
+                          prompt_len=args.prompt_len, gen=args.gen,
+                          reduced=args.reduced))
 
 
 if __name__ == "__main__":

@@ -1,10 +1,38 @@
-"""Property tests (hypothesis): the paper's combines must be associative
-and have the claimed identity elements — the invariants that make the
-Blelloch scan valid."""
+"""Property tests: the paper's combines must be associative and have the
+claimed identity elements — the invariants that make the Blelloch scan
+valid. Runs under hypothesis when available; otherwise falls back to
+fixed seeded example generation with the same test bodies."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fallback: hypothesis is optional
+    class st:  # noqa: N801 - mimic the hypothesis namespace
+        @staticmethod
+        def integers(min_value, max_value):
+            return (min_value, max_value)
+
+    def settings(max_examples=25, **_kw):
+        def deco(f):
+            f._max_examples = max_examples  # @settings sits above @given
+            return f
+        return deco
+
+    def given(**ranges):
+        def deco(f):
+            def wrapper():
+                rng = np.random.default_rng(0)
+                for _ in range(getattr(wrapper, "_max_examples", 25)):
+                    f(**{name: int(rng.integers(lo, hi + 1))
+                         for name, (lo, hi) in ranges.items()})
+            # No functools.wraps: pytest must see a zero-arg signature,
+            # not the original (seed, nx) parameters.
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            return wrapper
+        return deco
 
 from repro.core import (FilteringElement, SmoothingElement,
                         filtering_combine, filtering_identity,

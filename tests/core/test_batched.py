@@ -1,0 +1,222 @@
+"""Batched multi-trajectory fast path vs per-trajectory oracles.
+
+The batched drivers (`*_batched`) must be bit-for-bit-close to running
+each trajectory separately through the sequential baselines: covariance
+and square-root forms, filter and smoother, plus the early-stopping
+iterated driver against the fixed-M path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (IteratedConfig, filter_smoother,
+                        filter_smoother_batched, iterated_smoother,
+                        iterated_smoother_batched, kalman_filter,
+                        kalman_filter_batched, linearize_model_taylor,
+                        linearize_model_taylor_batched,
+                        parallel_filter_batched,
+                        parallel_filter_smoother_batched,
+                        sqrt_parallel_filter_smoother_batched)
+from repro.data import CoordinatedTurnConfig, make_coordinated_turn_model, \
+    simulate_trajectory
+
+from tests.core.test_parallel_vs_sequential import random_linear_ssm
+
+jtm = jax.tree_util.tree_map
+
+
+def batch_of_ssms(B, n, nx, ny, seed=0):
+    lins, yss = [], []
+    for i in range(B):
+        lin, ys, m0, P0 = random_linear_ssm(
+            jax.random.PRNGKey(seed * 1000 + i), n, nx, ny)
+        lins.append(lin)
+        yss.append(ys)
+    blin = jtm(lambda *x: jnp.stack(x), *lins)
+    return blin, jnp.stack(yss), lins, yss, m0, P0
+
+
+@pytest.mark.parametrize("B,n,nx,ny", [(1, 8, 3, 2), (3, 17, 4, 2),
+                                       (4, 64, 5, 2)])
+def test_batched_parallel_filter_matches_sequential_oracle(B, n, nx, ny):
+    blin, bys, lins, yss, m0, P0 = batch_of_ssms(B, n, nx, ny)
+    par = parallel_filter_batched(blin, bys, m0, P0)
+    assert par.mean.shape == (B, n, nx)
+    for i in range(B):
+        seq = kalman_filter(lins[i], yss[i], m0, P0)
+        np.testing.assert_allclose(par.mean[i], seq.mean, rtol=1e-8,
+                                   atol=1e-8)
+        np.testing.assert_allclose(par.cov[i], seq.cov, rtol=1e-8,
+                                   atol=1e-8)
+
+
+@pytest.mark.parametrize("B,n,nx,ny", [(2, 16, 3, 2), (3, 33, 4, 3)])
+def test_batched_parallel_smoother_matches_sequential_oracle(B, n, nx, ny):
+    blin, bys, lins, yss, m0, P0 = batch_of_ssms(B, n, nx, ny, seed=1)
+    _, par_s = parallel_filter_smoother_batched(blin, bys, m0, P0)
+    assert par_s.mean.shape == (B, n + 1, nx)
+    for i in range(B):
+        _, seq_s = filter_smoother(lins[i], yss[i], m0, P0)
+        np.testing.assert_allclose(par_s.mean[i], seq_s.mean, rtol=1e-7,
+                                   atol=1e-8)
+        np.testing.assert_allclose(par_s.cov[i], seq_s.cov, rtol=1e-7,
+                                   atol=1e-8)
+
+
+def test_batched_sqrt_parallel_matches_sequential_oracle():
+    B, n, nx, ny = 3, 32, 4, 2
+    blin, bys, lins, yss, m0, P0 = batch_of_ssms(B, n, nx, ny, seed=2)
+    sq_f, sq_s = sqrt_parallel_filter_smoother_batched(blin, bys, m0, P0)
+    for i in range(B):
+        seq_f, seq_s = filter_smoother(lins[i], yss[i], m0, P0)
+        np.testing.assert_allclose(sq_f.mean[i], seq_f.mean, rtol=1e-6,
+                                   atol=1e-8)
+        np.testing.assert_allclose(sq_f.cov[i], seq_f.cov, rtol=1e-6,
+                                   atol=1e-8)
+        np.testing.assert_allclose(sq_s.mean[i], seq_s.mean, rtol=1e-6,
+                                   atol=1e-8)
+        np.testing.assert_allclose(sq_s.cov[i], seq_s.cov, rtol=1e-6,
+                                   atol=1e-8)
+
+
+def test_batched_sequential_matches_per_trajectory():
+    B, n, nx, ny = 4, 25, 3, 2
+    blin, bys, lins, yss, m0, P0 = batch_of_ssms(B, n, nx, ny, seed=3)
+    bf, bs = filter_smoother_batched(blin, bys, m0, P0)
+    for i in range(B):
+        sf, ss = filter_smoother(lins[i], yss[i], m0, P0)
+        np.testing.assert_allclose(bf.mean[i], sf.mean, rtol=1e-9,
+                                   atol=1e-10)
+        np.testing.assert_allclose(bs.mean[i], ss.mean, rtol=1e-9,
+                                   atol=1e-10)
+        np.testing.assert_allclose(bs.cov[i], ss.cov, rtol=1e-9,
+                                   atol=1e-10)
+
+
+def test_batched_loglik_matches_per_trajectory():
+    B, n, nx, ny = 3, 20, 3, 2
+    blin, bys, lins, yss, m0, P0 = batch_of_ssms(B, n, nx, ny, seed=4)
+    _, lls = kalman_filter_batched(blin, bys, m0, P0, return_loglik=True)
+    assert lls.shape == (B,)
+    for i in range(B):
+        _, ll = kalman_filter(lins[i], yss[i], m0, P0, return_loglik=True)
+        np.testing.assert_allclose(lls[i], ll, rtol=1e-10)
+
+
+def test_per_lane_priors():
+    """m0/P0 with a leading batch axis are applied per lane."""
+    B, n, nx, ny = 2, 12, 3, 2
+    blin, bys, lins, yss, m0, P0 = batch_of_ssms(B, n, nx, ny, seed=5)
+    m0s = jnp.stack([m0, m0 + 1.0])
+    P0s = jnp.stack([P0, 2.0 * P0])
+    par = parallel_filter_batched(blin, bys, m0s, P0s)
+    for i in range(B):
+        seq = kalman_filter(lins[i], yss[i], m0s[i], P0s[i])
+        np.testing.assert_allclose(par.mean[i], seq.mean, rtol=1e-8,
+                                   atol=1e-8)
+
+
+def test_batched_taylor_linearization_matches_single():
+    model = make_coordinated_turn_model(CoordinatedTurnConfig())
+    trajs = jnp.stack([
+        jnp.broadcast_to(model.m0, (11, 5)),
+        jnp.broadcast_to(model.m0 + 0.1, (11, 5))])
+    blin = linearize_model_taylor_batched(model, trajs)
+    for i in range(2):
+        lin = linearize_model_taylor(model, trajs[i])
+        for got, want in zip(blin, lin):
+            np.testing.assert_allclose(got[i], want, rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Iterated drivers: batched == single, early-stop == fixed-M
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def ct_problem():
+    model = make_coordinated_turn_model(CoordinatedTurnConfig())
+    sims = [simulate_trajectory(model, 80, jax.random.PRNGKey(k))
+            for k in (7, 8, 9)]
+    return model, jnp.stack([s[1] for s in sims])
+
+
+@pytest.mark.parametrize("method", ["ekf", "slr"])
+@pytest.mark.parametrize("parallel", [True, False])
+def test_batched_iterated_matches_single(ct_problem, method, parallel):
+    model, bys = ct_problem
+    cfg = IteratedConfig(method=method, n_iter=4, parallel=parallel)
+    bt = iterated_smoother_batched(model, bys, cfg)
+    for i in range(bys.shape[0]):
+        st = iterated_smoother(model, bys[i], cfg)
+        np.testing.assert_allclose(bt.mean[i], st.mean, rtol=1e-6,
+                                   atol=1e-8)
+        np.testing.assert_allclose(bt.cov[i], st.cov, rtol=1e-6, atol=1e-8)
+
+
+def test_early_stop_matches_fixed_m(ct_problem):
+    model, bys = ct_problem
+    fixed = iterated_smoother(model, bys[0], IteratedConfig(n_iter=10))
+    es, info = iterated_smoother(
+        model, bys[0], IteratedConfig(n_iter=10, tol=1e-9),
+        return_info=True)
+    assert int(info.iterations) <= 10
+    np.testing.assert_allclose(es.mean, fixed.mean, atol=1e-6)
+
+
+def test_early_stop_executes_fewer_passes(ct_problem):
+    """A loose tolerance must stop well before the M=10 budget."""
+    model, bys = ct_problem
+    _, info = iterated_smoother(
+        model, bys[0], IteratedConfig(n_iter=10, tol=1e-3),
+        return_info=True)
+    assert int(info.iterations) < 10
+    assert float(info.final_delta) <= 1e-3
+
+
+def test_batched_early_stop_freezes_lanes(ct_problem):
+    model, bys = ct_problem
+    cfg_es = IteratedConfig(n_iter=10, tol=1e-9)
+    cfg_fm = IteratedConfig(n_iter=10)
+    bt, info = iterated_smoother_batched(model, bys, cfg_es,
+                                         return_info=True)
+    fixed = iterated_smoother_batched(model, bys, cfg_fm)
+    assert info.iterations.shape == (bys.shape[0],)
+    assert bool(jnp.all(info.iterations <= 10))
+    np.testing.assert_allclose(bt.mean, fixed.mean, atol=1e-6)
+
+
+def test_fused_impl_falls_back_for_unknown_combines():
+    """combine_impl='fused' with a user-supplied per-element combine must
+    flatten+vmap (a custom combine can't be assumed to broadcast over the
+    level's [B, P] leading axes)."""
+    from repro.core import associative_scan
+
+    def combine(a, b):
+        # Deliberately per-element: .T on a 2-D matrix, vector dot.
+        return (a[0] @ b[0].T, a[1] + b[0] @ a[1])
+
+    key = jax.random.PRNGKey(0)
+    elems = (0.1 * jax.random.normal(key, (2, 8, 3, 3)),
+             jax.random.normal(key, (2, 8, 3)))
+    want = associative_scan(combine, elems, combine_impl="jnp",
+                            batch_dims=1)
+    got = associative_scan(combine, elems, combine_impl="fused",
+                           batch_dims=1)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_early_stop_history_semantics(ct_problem):
+    """History keeps the [M, ...] shape; rows past convergence repeat the
+    final mean."""
+    model, bys = ct_problem
+    traj, hist, info = iterated_smoother(
+        model, bys[0], IteratedConfig(n_iter=10, tol=1e-3),
+        return_history=True, return_info=True)
+    it = int(info.iterations)
+    assert hist.shape[0] == 10
+    np.testing.assert_allclose(hist[it - 1], traj.mean)
+    for k in range(it, 10):
+        np.testing.assert_allclose(hist[k], traj.mean)

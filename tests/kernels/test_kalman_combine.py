@@ -96,7 +96,53 @@ def test_kernel_inside_full_scan():
 
 def test_dispatch_helper():
     from repro.core.parallel import filtering_combine, smoothing_combine
-    assert ops.batched_combine_for(filtering_combine) is ops.filtering_combine_op
-    assert ops.batched_combine_for(smoothing_combine) is ops.smoothing_combine_op
+    f_op = ops.batched_combine_for(filtering_combine, total_elems=64)
+    s_op = ops.batched_combine_for(smoothing_combine, total_elems=64)
+    assert f_op.func is ops.filtering_combine_op
+    assert s_op.func is ops.smoothing_combine_op
     f = ops.batched_combine_for(lambda a, b: a)
     assert callable(f)
+
+
+def test_select_impl_is_static():
+    """The policy is a pure function of the call site's total element
+    count — a Python int, never a traced value or per-level batch size."""
+    assert ops.select_impl(None) == "kernel"
+    assert ops.select_impl(ops._MIN_KERNEL_BATCH) == "kernel"
+    assert ops.select_impl(ops._MIN_KERNEL_BATCH - 1) == "ref"
+    assert ops.select_impl(10_000) == "kernel"
+
+
+@pytest.mark.parametrize("n,expect", [(32, "kernel"), (4, "ref")])
+def test_dispatch_is_trace_stable_across_scan_levels(monkeypatch, n,
+                                                     expect):
+    """One scan = one implementation: with total elems >= threshold every
+    Blelloch level runs the kernel, even levels whose pair count is below
+    the threshold (and symmetrically for small scans). A per-level policy
+    would flip paths mid-scan and retrace the kernel at each level."""
+    from repro.core import associative_scan, filtering_combine
+
+    counts = {"kernel": 0, "ref": 0}
+    orig_k = ops._k.filtering_combine_batched
+    orig_r = ops._ref.filtering_combine_batched_ref
+
+    def count_k(ei, ej, **kw):
+        counts["kernel"] += 1
+        return orig_k(ei, ej, **kw)
+
+    def count_r(ei, ej):
+        if ei.b.shape[0] > 0:  # empty levels legitimately take the ref
+            counts["ref"] += 1
+        return orig_r(ei, ej)
+
+    monkeypatch.setattr(ops._k, "filtering_combine_batched", count_k)
+    monkeypatch.setattr(ops._ref, "filtering_combine_batched_ref", count_r)
+
+    rng = np.random.default_rng(0)
+    elems = _rand_filtering(rng, n, 3, jnp.float64)
+    out = associative_scan(filtering_combine, elems, combine_impl="pallas")
+    jax.block_until_ready(out.b)
+    other = "ref" if expect == "kernel" else "kernel"
+    assert counts[expect] > 0
+    assert counts[other] == 0, (
+        f"dispatch flipped to {other} mid-scan: {counts}")

@@ -1,0 +1,67 @@
+"""Smoother serving workload: bucketing, padding, and correctness.
+
+Time-axis padding uses uninformative (R-inflated) measurements, so a
+padded request's posteriors on the real steps must match the unpadded
+single-trajectory smoother.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import IteratedConfig, iterated_smoother
+from repro.data import CoordinatedTurnConfig, make_coordinated_turn_model, \
+    simulate_trajectory
+from repro.launch.serve import (SmootherServeConfig, SmootherServer,
+                                _next_pow2, serve_smoother)
+
+
+def test_next_pow2():
+    assert _next_pow2(1) == 1
+    assert _next_pow2(5) == 8
+    assert _next_pow2(8) == 8
+    assert _next_pow2(9) == 16
+
+
+@pytest.fixture(scope="module")
+def served():
+    model = make_coordinated_turn_model(CoordinatedTurnConfig())
+    cfg = SmootherServeConfig(requests=5, n=12, max_batch=4, n_iter=3,
+                              tol=0.0, lm_lambda=0.0, f64=True)
+    server = SmootherServer(model, cfg)
+    lengths = [12, 7, 12, 5, 7]
+    requests = [np.asarray(simulate_trajectory(
+        model, L, jax.random.PRNGKey(10 + i))[1])
+        for i, L in enumerate(lengths)]
+    stats = server.serve_requests(requests, emit=lambda *_: None)
+    return model, cfg, lengths, requests, stats
+
+
+def test_bucketing_and_shapes(served):
+    model, cfg, lengths, requests, stats = served
+    # Lengths {12} -> bucket 16, {7, 5} -> bucket 8: two launches.
+    assert stats["launches"] == 2
+    for L, mean in zip(lengths, stats["results"]):
+        assert mean.shape == (L + 1, model.nx)
+        assert np.all(np.isfinite(mean))
+
+
+def test_padded_results_match_unpadded(served):
+    """Real-step posteriors must be unchanged by time padding."""
+    model, cfg, lengths, requests, stats = served
+    icfg = IteratedConfig(method=cfg.method, n_iter=cfg.n_iter,
+                          tol=cfg.tol, lm_lambda=cfg.lm_lambda)
+    for L, ys, mean in zip(lengths, requests, stats["results"]):
+        want = iterated_smoother(model, jnp.asarray(ys), icfg)
+        np.testing.assert_allclose(mean, np.asarray(want.mean),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_serve_smoother_end_to_end():
+    stats = serve_smoother(
+        SmootherServeConfig(requests=3, n=8, max_batch=2, n_iter=2,
+                            tol=0.0, lm_lambda=0.0, vary_lengths=True),
+        emit=lambda *_: None)
+    assert stats["requests"] == 3
+    assert stats["mean_rmse"] < 1.0
+    assert len(stats["results"]) == 3
