@@ -10,6 +10,9 @@ benches. Prints ``name,us_per_call,derived`` CSV (task spec deliverable
   models_bench       — reduced-config train steps for the arch zoo
   smoothers_bench    — batched multi-trajectory throughput (traj/sec for
                        B in {1, 8, 64, 256}; batched vs loop vs sequential)
+  serve_bench        — autobatching service latency: static vs
+                       deadline-aware flush under poisson/bursty arrivals
+                       (p50/p95, traj/s; snapshot BENCH_serve.json)
 
 Roofline/dry-run numbers (full configs, production mesh) come from
 ``python -m repro.launch.dryrun --all`` — see EXPERIMENTS.md.
@@ -53,7 +56,7 @@ def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--only", type=str, default=None,
                    help="comma-separated subset: fig1,convergence,kernels,"
-                        "models,smoothers")
+                        "models,smoothers,serve")
     p.add_argument("--quick", action="store_true",
                    help="smaller sizes for CI")
     p.add_argument("--json", type=str, default=None, metavar="PATH",
@@ -89,6 +92,9 @@ def main() -> None:
             rows += smoothers_bench.run(n=128, batches=(1, 8, 64))
         else:
             rows += smoothers_bench.run()
+    if only is None or "serve" in only:
+        from benchmarks import serve_bench
+        rows += serve_bench.run(quick=args.quick)
     if args.json:
         write_json(rows, args.json)
         print(f"# wrote {len(rows)} rows to {args.json}")

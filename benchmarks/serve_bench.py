@@ -1,0 +1,103 @@
+"""Serving-policy comparison: static fill-only vs deadline-aware flushing.
+
+The question the autobatch queue answers (ISSUE 3 / ROADMAP serving
+item): under a request *stream*, when should a `(n_pad, nx)` bucket stop
+waiting for more lanes? One run per arrival setting (poisson, bursty at
+moderate load, bursty at bucket-saturating load) x {static, deadline}
+flush policies — all over one shared `SmootherServer`
+(so every policy sees identical warm executables and an identical
+arrival trace), reporting per-request latency percentiles (queue wait is
+simulated-clock, bucket compute is measured wall time; see
+`repro.launch.autobatch`), throughput, launch count, and occupancy.
+
+``us_per_call`` for `serve/...` rows is the **p95 latency** in
+microseconds; the `serve/p95-win/...` rows derive the static/deadline
+p95 ratio — the acceptance metric tracked in `BENCH_serve.json`
+(`python -m benchmarks.run --only serve --json BENCH_serve.json`).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+REQUESTS, N, MAX_BATCH = 48, 64, 8
+QUICK_REQUESTS, QUICK_N, QUICK_MAX_BATCH = 10, 16, 4
+
+
+def _settings(quick: bool):
+    """(label, arrival kind, rate req/s, burst size) per run.
+
+    ``bursty`` runs at moderate load — buckets rarely fill before the
+    stream moves on, which is exactly where fill-only batching starves
+    stragglers; ``bursty-heavy`` saturates the bucket width so both
+    policies flush mostly full (the no-regression check).
+    """
+    settings = (("poisson", "poisson", 32.0, 1),
+                ("bursty", "bursty", 12.0, 4),
+                ("bursty-heavy", "bursty", 32.0, 6))
+    return settings[:2] if quick else settings
+
+
+def run(requests=REQUESTS, n=N, max_batch=MAX_BATCH, quick=False,
+        emit=print):
+    from repro.data import (CoordinatedTurnConfig,
+                            make_coordinated_turn_model,
+                            simulate_trajectory)
+    from repro.launch.autobatch import FlushPolicy, make_arrivals
+    from repro.launch.serve import SmootherServeConfig, SmootherServer
+
+    jax.config.update("jax_enable_x64", True)
+    if quick:
+        requests, n, max_batch = QUICK_REQUESTS, QUICK_N, QUICK_MAX_BATCH
+
+    base = SmootherServeConfig(
+        requests=requests, n=n, max_batch=max_batch, n_iter=3, tol=1e-6,
+        lm_lambda=1.0, deadline_s=1.0, max_wait_s=0.15)
+    model = make_coordinated_turn_model(CoordinatedTurnConfig())
+
+    lengths = [max(n // 2, 2), max((3 * n) // 4, 2), n]
+    rng = np.random.default_rng(base.seed)
+    fleet = []
+    for i in range(requests):
+        n_i = int(lengths[int(rng.integers(len(lengths)))])
+        _, ys = simulate_trajectory(model, n_i,
+                                    jax.random.PRNGKey(base.seed + i))
+        fleet.append(np.asarray(ys))
+
+    # One server across all runs: every policy/arrival combination sees
+    # the same warm jit cache — the comparison isolates the flush policy.
+    server = SmootherServer(model, base)
+
+    rows = []
+    for label, kind, rate, burst_size in _settings(quick):
+        arrivals = make_arrivals(kind, requests, rate, burst_size,
+                                 seed=base.seed)
+        p95 = {}
+        for policy in ("static", "deadline"):
+            stats = server.serve_stream(
+                fleet, arrivals, emit=lambda *_: None,
+                policy=FlushPolicy(kind=policy, max_batch=max_batch,
+                                   max_wait=base.max_wait_s,
+                                   slack=base.slack))
+            assert all(m is not None for m in stats["results"])
+            p95[policy] = stats["latency_p95_s"]
+            name = f"serve/{policy}/{label}/R={requests}/n={n}"
+            rows.append((name, stats["latency_p95_s"] * 1e6,
+                         f"p50_ms={stats['latency_p50_s'] * 1e3:.2f};"
+                         f"p95_ms={stats['latency_p95_s'] * 1e3:.2f};"
+                         f"traj_per_s={stats['traj_per_s']:.2f};"
+                         f"launches={stats['launches']};"
+                         f"occupancy={stats['occupancy']:.2f};"
+                         f"deadline_hit={stats['deadline_hit_rate']:.2f}"))
+        rows.append((f"serve/p95-win/{label}/R={requests}/n={n}",
+                     p95["deadline"] * 1e6,
+                     f"speedup={p95['static'] / p95['deadline']:.2f}x"))
+
+    for name, us, derived in rows:
+        emit(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,9 +1,12 @@
 #!/usr/bin/env bash
-# Tier-1 CI entry point: the full test suite plus a quick pass over the
-# perf-critical benchmark paths (paper fig1 + kernels + batched smoother
-# throughput), so a PR that regresses a hot path fails here, not three
-# PRs later. The full benchmark suite exceeds the CI budget on CPU;
-# --quick shrinks problem sizes, and `timeout` enforces a hard ceiling.
+# Tier-1 CI entry point: the full test suite (pytest collects tests/
+# recursively — the PR 3 additions tests/core/test_batched_parity.py and
+# tests/launch/test_autobatch.py ride in tier-1) plus a quick pass over
+# the perf-critical benchmark paths (paper fig1 + kernels + batched
+# smoother throughput + autobatch serving), so a PR that regresses a hot
+# path fails here, not three PRs later. The full benchmark suite exceeds
+# the CI budget on CPU; --quick shrinks problem sizes, and `timeout`
+# enforces a hard ceiling.
 #
 #   scripts/ci.sh [pytest args...]
 set -euo pipefail
@@ -11,7 +14,9 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-TEST_BUDGET="${CI_TEST_BUDGET:-1800}"   # seconds
+# The full suite measures ~33 min on the 2-core dev container (f64
+# oracle comparisons dominate); 3600 leaves ~45% headroom.
+TEST_BUDGET="${CI_TEST_BUDGET:-3600}"   # seconds
 BENCH_BUDGET="${CI_BENCH_BUDGET:-600}"  # seconds
 
 echo "== tier-1 tests (budget ${TEST_BUDGET}s) =="
@@ -20,5 +25,5 @@ timeout "${TEST_BUDGET}" python -m pytest -x -q "$@"
 echo "== quick perf paths (budget ${BENCH_BUDGET}s) =="
 BENCH_OUT="$(mktemp -d)/BENCH_ci_quick.json"
 timeout "${BENCH_BUDGET}" python -m benchmarks.run \
-    --quick --only fig1,kernels,smoothers --json "${BENCH_OUT}"
+    --quick --only fig1,kernels,smoothers,serve --json "${BENCH_OUT}"
 echo "ci: OK (bench json: ${BENCH_OUT})"

@@ -56,6 +56,16 @@ class IteratedConfig:
             return "fused" if batched else "jnp"
         return self.combine_impl
 
+    def cache_key(self, n_pad: int, b_pad: int, nx: int) -> tuple:
+        """Hashable executable signature of one padded bucket launch.
+
+        The serving queue (launch/autobatch.py) jit-caches one batched
+        smoother executable per (config, time bucket, batch width,
+        state dim); this is the key its warmup and compile-count
+        bookkeeping use. Frozen config => the tuple is hashable.
+        """
+        return (self, int(n_pad), int(b_pad), int(nx))
+
 
 class IterationInfo(NamedTuple):
     """Diagnostics of the outer loop: passes executed and the last mean

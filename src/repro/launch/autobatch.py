@@ -1,0 +1,339 @@
+"""Deadline-aware autobatching queue for the smoother service.
+
+The batched smoothers (DESIGN.md §Batching) amortize fixed launch cost
+across B trajectories, but a *service* does not see B requests at once —
+it sees a stream. The queue here decides **when to stop waiting**: each
+request joins a ``(n_pad, nx)`` bucket (time axis padded to the next
+power of two, exactly the static policy of the one-shot server), and a
+bucket is flushed when any of
+
+  * **full**     — it reached ``max_batch`` lanes (both policies);
+  * **deadline** — waiting any longer would make the *tightest* deadline
+                   in the bucket miss, given the predicted compute time
+                   of the bucket (``min deadline - slack * est``);
+  * **max_wait** — the oldest request has waited ``max_wait`` seconds
+                   (starvation bound: rare signatures flush too);
+
+fires. ``kind="static"`` disables the two timer conditions and is the
+fill-only streaming extension of the PR 2 one-shot bucketing — the
+baseline that `benchmarks/serve_bench.py` compares against.
+
+Compute-time prediction is a per-signature EMA of measured bucket wall
+times (`ComputeEstimator`), seeded by server warmup and scaled linearly
+in batch width for unseen widths. Flush widths are quantized to powers
+of two (`pad_width`), so the jit-cache signature space per time bucket
+is O(log2 max_batch) and compile count stays bounded.
+
+`run_service` is the discrete-event driver: arrivals carry *simulated*
+timestamps (so arrival processes are reproducible and independent of
+host speed), while bucket compute is *measured* wall time fed back by
+the executor callback — queue wait is simulated, compute is real. A
+single serial executor models the one-accelerator deployment: flushed
+buckets queue behind one another (``free_at``).
+
+This module is deliberately jax-free: policy logic is pure Python +
+numpy and unit-testable with a fake clock (`tests/launch/test_autobatch.py`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import deque
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+Signature = Tuple[int, int]  # (n_pad, nx)
+
+FLUSH_FULL = "full"
+FLUSH_DEADLINE = "deadline"
+FLUSH_MAX_WAIT = "max_wait"
+FLUSH_DRAIN = "drain"
+
+
+def next_pow2(n: int) -> int:
+    return 1 << (int(n) - 1).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class QueuedRequest:
+    """One smoothing request as the queue sees it.
+
+    ``payload`` (the measurements) is opaque to the queue — policy
+    decisions use only length, state dim, arrival time, and deadline.
+    ``deadline`` is the *absolute* completion target in simulated
+    seconds (``math.inf`` = none).
+    """
+
+    req_id: int
+    n: int
+    nx: int
+    arrival: float
+    deadline: float = math.inf
+    payload: object = None
+
+    @property
+    def signature(self) -> Signature:
+        return (next_pow2(self.n), self.nx)
+
+
+@dataclasses.dataclass(frozen=True)
+class FlushPolicy:
+    """Knobs of the flush decision (DESIGN.md §Serving knob table)."""
+
+    kind: str = "deadline"    # "deadline" | "static" (fill-only baseline)
+    max_batch: int = 64       # bucket launch width (full-flush trigger)
+    max_wait: float = 0.25    # s; queue-wait cap on the oldest request
+    slack: float = 1.25       # safety factor on predicted compute time
+    ema_alpha: float = 0.4    # compute-estimator smoothing
+    default_compute: float = 0.0  # estimate before any observation
+
+    def __post_init__(self):
+        if self.kind not in ("deadline", "static"):
+            raise ValueError(f"unknown flush policy kind {self.kind!r}")
+        if self.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+
+    def pad_width(self, k: int) -> int:
+        """Batch padding width for ``k`` requests: next power of two,
+        clamped to ``max_batch`` — bounds the jit-signature space."""
+        return min(next_pow2(max(k, 1)), self.max_batch)
+
+
+class ComputeEstimator:
+    """EMA of measured bucket compute seconds per (signature, b_pad).
+
+    Unseen widths of a seen signature are scaled linearly in batch
+    width from the nearest observed width (batched launch cost is
+    ~linear in B on a fixed machine); fully unseen signatures fall back
+    to ``default``.
+    """
+
+    def __init__(self, alpha: float = 0.4, default: float = 0.0):
+        self.alpha = float(alpha)
+        self.default = float(default)
+        self._ema: Dict[Tuple[Signature, int], float] = {}
+
+    def observe(self, sig: Signature, b_pad: int, dt: float) -> None:
+        key = (sig, int(b_pad))
+        old = self._ema.get(key)
+        self._ema[key] = (float(dt) if old is None
+                          else self.alpha * float(dt)
+                          + (1.0 - self.alpha) * old)
+
+    def estimate(self, sig: Signature, b_pad: int) -> float:
+        key = (sig, int(b_pad))
+        if key in self._ema:
+            return self._ema[key]
+        widths = [w for (s, w) in self._ema if s == sig]
+        if widths:
+            w = min(widths, key=lambda w: abs(w - b_pad))
+            return self._ema[(sig, w)] * (b_pad / w)
+        return self.default
+
+
+@dataclasses.dataclass
+class BucketFlush:
+    """One launch decision: which requests, at what padded width, why."""
+
+    signature: Signature
+    requests: List[QueuedRequest]
+    b_pad: int
+    reason: str
+    at: float
+
+
+class AutobatchQueue:
+    """Deadline-aware bucket queue over ``(n_pad, nx)`` signatures.
+
+    Clock-agnostic: callers pass ``now`` explicitly (simulated seconds in
+    the service driver, fabricated values in the fake-clock unit tests).
+    """
+
+    def __init__(self, policy: FlushPolicy,
+                 estimator: Optional[ComputeEstimator] = None):
+        self.policy = policy
+        self.estimator = estimator if estimator is not None else \
+            ComputeEstimator(policy.ema_alpha, policy.default_compute)
+        self._buckets: Dict[Signature, deque] = {}
+
+    def __len__(self) -> int:
+        return sum(len(b) for b in self._buckets.values())
+
+    def pending(self) -> int:
+        return len(self)
+
+    def submit(self, req: QueuedRequest, now: float) -> None:
+        del now  # admission is unconditional; kept for symmetry
+        self._buckets.setdefault(req.signature, deque()).append(req)
+
+    def _due(self, sig: Signature) -> Tuple[float, str]:
+        """Earliest time this bucket must flush, and the triggering rule.
+
+        The deadline bound scans the whole bucket — deadlines are an
+        arbitrary per-request field, so the tightest one need not belong
+        to the FIFO head. Static policy never times out (fill-only):
+        due is ``inf``.
+        """
+        bucket = self._buckets[sig]
+        if not bucket or self.policy.kind == "static":
+            return math.inf, FLUSH_DRAIN
+        b_pad = self.policy.pad_width(len(bucket))
+        est = self.estimator.estimate(sig, b_pad)
+        tightest = min(r.deadline for r in bucket)
+        due_deadline = tightest - self.policy.slack * est
+        due_wait = bucket[0].arrival + self.policy.max_wait
+        if due_deadline <= due_wait:
+            return due_deadline, FLUSH_DEADLINE
+        return due_wait, FLUSH_MAX_WAIT
+
+    def next_due(self) -> float:
+        """Earliest timer-driven flush instant across buckets (inf if
+        none) — the service driver's next wake-up."""
+        dues = [self._due(sig)[0] for sig in self._buckets]
+        return min(dues) if dues else math.inf
+
+    def _pop_chunk(self, sig: Signature, k: int, reason: str, now: float
+                   ) -> BucketFlush:
+        bucket = self._buckets[sig]
+        reqs = [bucket.popleft() for _ in range(min(k, len(bucket)))]
+        return BucketFlush(signature=sig, requests=reqs,
+                           b_pad=self.policy.pad_width(len(reqs)),
+                           reason=reason, at=now)
+
+    def pop_ready(self, now: float, drain: bool = False
+                  ) -> List[BucketFlush]:
+        """All flushes triggered at ``now`` (FIFO inside a bucket,
+        buckets in sorted-signature order for determinism). With
+        ``drain=True`` every remaining request flushes (end of stream)."""
+        flushes: List[BucketFlush] = []
+        for sig in sorted(self._buckets):
+            bucket = self._buckets[sig]
+            while len(bucket) >= self.policy.max_batch:
+                flushes.append(self._pop_chunk(
+                    sig, self.policy.max_batch, FLUSH_FULL, now))
+            if not bucket:
+                continue
+            due, rule = self._due(sig)
+            if due <= now:
+                flushes.append(self._pop_chunk(sig, len(bucket), rule, now))
+            elif drain:
+                flushes.append(self._pop_chunk(
+                    sig, len(bucket), FLUSH_DRAIN, now))
+        return flushes
+
+
+# ---------------------------------------------------------------------------
+# Discrete-event service driver
+# ---------------------------------------------------------------------------
+
+def make_arrivals(kind: str, n_requests: int, rate: float,
+                  burst_size: int = 8, seed: int = 0) -> np.ndarray:
+    """Simulated arrival timestamps (seconds, sorted, length n_requests).
+
+    ``poisson`` — exponential inter-arrival times at ``rate`` req/s.
+    ``bursty``  — bursts of ``burst_size`` back-to-back requests; burst
+    *starts* are Poisson at ``rate / burst_size`` so the offered load
+    (requests/s) matches the poisson setting at equal ``rate``.
+    """
+    rng = np.random.default_rng(seed)
+    if kind == "poisson":
+        gaps = rng.exponential(1.0 / rate, n_requests)
+        return np.cumsum(gaps)
+    if kind == "bursty":
+        n_bursts = math.ceil(n_requests / burst_size)
+        starts = np.cumsum(rng.exponential(burst_size / rate, n_bursts))
+        times = np.repeat(starts, burst_size)[:n_requests]
+        return times
+    raise ValueError(f"unknown arrival process {kind!r}")
+
+
+def run_service(requests: Sequence[QueuedRequest],
+                execute: Callable[[BucketFlush], float],
+                policy: FlushPolicy,
+                estimator: Optional[ComputeEstimator] = None) -> dict:
+    """Drive the queue over a timestamped request stream.
+
+    ``execute(flush) -> seconds`` runs the padded bucket and returns its
+    measured wall time; the driver charges it to a single serial
+    executor (compute is real, the clock between events is simulated).
+    Returns per-request records plus launch log; summarize with
+    `summarize_service`.
+    """
+    queue = AutobatchQueue(policy, estimator)
+    events = sorted(requests, key=lambda r: (r.arrival, r.req_id))
+    i, n = 0, len(events)
+    clock = 0.0
+    free_at = 0.0
+    records: List[dict] = []
+    launches: List[dict] = []
+
+    def run_flushes(flushes: List[BucketFlush]) -> None:
+        nonlocal free_at
+        for fl in flushes:
+            start = max(fl.at, free_at)
+            dt = float(execute(fl))
+            queue.estimator.observe(fl.signature, fl.b_pad, dt)
+            done = start + dt
+            free_at = done
+            launches.append({
+                "signature": fl.signature, "b": len(fl.requests),
+                "b_pad": fl.b_pad, "reason": fl.reason, "at": fl.at,
+                "start": start, "compute_s": dt,
+            })
+            for r in fl.requests:
+                records.append({
+                    "req_id": r.req_id, "arrival": r.arrival,
+                    "latency_s": done - r.arrival,
+                    "queue_wait_s": start - r.arrival,
+                    "compute_s": dt, "reason": fl.reason,
+                    "deadline_met": done <= r.deadline,
+                })
+
+    while i < n or queue.pending():
+        next_arr = events[i].arrival if i < n else math.inf
+        due = queue.next_due()
+        if next_arr <= due:
+            if next_arr == math.inf:
+                # Stream over, no timers pending: drain (static policy).
+                run_flushes(queue.pop_ready(clock, drain=True))
+                continue
+            clock = max(clock, next_arr)
+            while i < n and events[i].arrival <= clock:
+                queue.submit(events[i], clock)
+                i += 1
+        else:
+            clock = max(clock, due)
+        run_flushes(queue.pop_ready(clock))
+
+    return {"records": records, "launches": launches}
+
+
+def summarize_service(service: dict) -> dict:
+    """Latency/throughput digest of a `run_service` result."""
+    records, launches = service["records"], service["launches"]
+    lat = np.asarray([r["latency_s"] for r in records])
+    wait = np.asarray([r["queue_wait_s"] for r in records])
+    arrivals = np.asarray([r["arrival"] for r in records])
+    done = arrivals + lat
+    span = float(done.max() - arrivals.min()) if len(lat) else 0.0
+    reasons: Dict[str, int] = {}
+    for l in launches:
+        reasons[l["reason"]] = reasons.get(l["reason"], 0) + 1
+    occupancy = (float(np.mean([l["b"] / l["b_pad"] for l in launches]))
+                 if launches else 0.0)
+    return {
+        "requests": len(records),
+        "launches": len(launches),
+        "latency_p50_s": float(np.percentile(lat, 50)) if len(lat) else 0.0,
+        "latency_p95_s": float(np.percentile(lat, 95)) if len(lat) else 0.0,
+        "latency_mean_s": float(lat.mean()) if len(lat) else 0.0,
+        "queue_wait_p95_s": (float(np.percentile(wait, 95))
+                             if len(wait) else 0.0),
+        "traj_per_s": len(records) / span if span > 0 else 0.0,
+        "deadline_hit_rate": (float(np.mean([r["deadline_met"]
+                                             for r in records]))
+                              if records else 1.0),
+        "occupancy": occupancy,
+        "flush_reasons": reasons,
+    }

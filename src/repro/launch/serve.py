@@ -10,10 +10,21 @@ fleet of smoothing requests with heterogeneous trajectory lengths is
 bucketed by (padded n, nx), padded along time with uninformative
 measurements (R inflated by ``R_PAD_SCALE`` so padded steps carry no
 information) and along batch by replication, then each bucket runs as ONE
-batched iterated smoother call — B trajectories per fused scan level:
+batched iterated smoother call — B trajectories per fused scan level.
+
+Two serving modes:
+
+* ``--arrival none`` (default) — the PR 2 one-shot path: all requests
+  are present up front, buckets launch back-to-back (``--policy static``
+  semantics, kept as the offline/batch entry point);
+* ``--arrival poisson|bursty`` — a timestamped request stream driven
+  through the autobatching queue (`launch/autobatch.py`):
+  ``--policy deadline`` flushes buckets under per-request latency
+  deadlines, ``--policy static`` is the fill-only baseline.
 
     python -m repro.launch.serve --workload smoother --requests 64 \
-        --n 512 --max-batch 64 --tol 1e-6
+        --n 512 --max-batch 64 --tol 1e-6 \
+        --arrival bursty --policy deadline --rate 8 --deadline 2.0
 """
 from __future__ import annotations
 
@@ -26,6 +37,10 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.launch.autobatch import (ComputeEstimator, FlushPolicy,
+                                    QueuedRequest, make_arrivals, next_pow2,
+                                    run_service, summarize_service)
 
 
 # ---------------------------------------------------------------------------
@@ -113,10 +128,38 @@ class SmootherServeConfig:
     vary_lengths: bool = True
     seed: int = 0
     f64: bool = True         # covariance form is f32-fragile at long n
+    # Streaming mode (autobatch queue; "none" = one-shot PR 2 path).
+    arrival: str = "none"    # "none" | "poisson" | "bursty"
+    policy: str = "static"   # "static" | "deadline"
+    rate: float = 8.0        # offered load, requests/s (simulated clock)
+    burst_size: int = 8      # bursty: requests per burst
+    deadline_s: float = 2.0  # per-request completion budget
+    max_wait_s: float = 0.25  # queue-wait cap (starvation bound)
+    slack: float = 1.25      # safety factor on predicted compute
+    warm: bool = True        # pre-compile bucket signatures before serving
 
 
-def _next_pow2(n: int) -> int:
-    return 1 << (int(n) - 1).bit_length()
+def pad_requests(batch: List[np.ndarray], n_pad: int, b_pad: int,
+                 R: np.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pad a bucket of measurement sequences to ``[b_pad, n_pad, ny]``.
+
+    Time padding appends zero measurements whose per-step R is inflated
+    by ``R_PAD_SCALE`` (an exactly-uninformative update up to float
+    error — the serving contract pinned by
+    tests/core/test_batched_parity.py); batch padding replicates lane 0.
+    Returns the padded measurements and the per-lane, per-step R stack.
+    """
+    R = np.asarray(R)
+    ny = R.shape[-1]
+    ys = np.zeros((b_pad, n_pad, ny), R.dtype)
+    rs = np.broadcast_to(R * R_PAD_SCALE, (b_pad, n_pad, ny, ny)).copy()
+    for i, y in enumerate(batch):
+        ys[i, :len(y)] = y
+        rs[i, :len(y)] = R
+    for i in range(len(batch), b_pad):           # batch padding: replicate
+        ys[i] = ys[0]
+        rs[i] = rs[0]
+    return jnp.asarray(ys), jnp.asarray(rs)
 
 
 class SmootherServer:
@@ -146,25 +189,19 @@ class SmootherServer:
                                              return_info=True)
 
         self._run = jax.jit(run)
+        # Per-bucket executable signatures seen so far (compile-count
+        # bookkeeping; jax.jit caches by shape, this mirrors its keys).
+        self.signatures_seen = set()
 
     def _pad_bucket(self, batch: List[np.ndarray], n_pad: int, b_pad: int
                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        ny = self.model.ny
-        R = np.asarray(self.model.R)
-        dtype = R.dtype
-        ys = np.zeros((b_pad, n_pad, ny), dtype)
-        rs = np.broadcast_to(R * R_PAD_SCALE, (b_pad, n_pad, ny, ny)).copy()
-        for i, y in enumerate(batch):
-            ys[i, :len(y)] = y
-            rs[i, :len(y)] = R
-        for i in range(len(batch), b_pad):       # batch padding: replicate
-            ys[i] = ys[0]
-            rs[i] = rs[0]
-        return jnp.asarray(ys), jnp.asarray(rs)
+        return pad_requests(batch, n_pad, b_pad, np.asarray(self.model.R))
 
     def smooth_batch(self, batch: List[np.ndarray], n_pad: int, b_pad: int):
         """Run one padded bucket launch; returns per-request trajectories
         (list of ``[n_i + 1, nx]`` means) and the per-lane iteration info."""
+        self.signatures_seen.add(
+            self._icfg.cache_key(n_pad, b_pad, self.model.nx))
         ys, rs = self._pad_bucket(batch, n_pad, b_pad)
         traj, info = self._run(ys, rs)
         jax.block_until_ready(traj.mean)
@@ -172,11 +209,43 @@ class SmootherServer:
                  for i, y in enumerate(batch)]
         return means, info
 
+    def warmup(self, n_pads, b_pads, estimator: ComputeEstimator = None):
+        """Pre-compile every (n_pad, b_pad) bucket signature and, when an
+        estimator is given, seed it with a warm measured launch each.
+
+        Compile time must not pollute streaming latency (a production
+        server warms its executables at deploy time); the warm call is
+        what the deadline policy should budget for. Signatures already
+        seen skip the compile call, and without an estimator (static
+        policy never consults one) nothing warm is re-measured — so a
+        shared server pays for each signature once, not per stream.
+        """
+        ny = self.model.ny
+        for n_pad in sorted(set(n_pads)):
+            dummy = [np.zeros((n_pad, ny))]
+            for b_pad in sorted(set(b_pads)):
+                key = self._icfg.cache_key(n_pad, b_pad, self.model.nx)
+                if key not in self.signatures_seen:
+                    self.smooth_batch(dummy, n_pad, b_pad)  # compile
+                if estimator is not None:
+                    t0 = time.perf_counter()
+                    _, info = self.smooth_batch(dummy, n_pad, b_pad)
+                    dt = time.perf_counter() - t0
+                    # The zero-measurement dummy converges early under
+                    # tol>0; scale to the full pass budget so the seed
+                    # upper-bounds real traffic (a low seed would make
+                    # the deadline trigger fire too late until the EMA
+                    # catches up).
+                    iters = float(np.mean(np.asarray(info.iterations)))
+                    if self._icfg.tol > 0.0 and iters >= 1.0:
+                        dt *= self._icfg.n_iter / iters
+                    estimator.observe((n_pad, self.model.nx), b_pad, dt)
+
     def serve_requests(self, requests: List[np.ndarray], emit=print) -> dict:
         """Bucket, pad, and smooth a full request list; returns stats."""
         buckets: Dict[int, List[int]] = defaultdict(list)
         for idx, ys in enumerate(requests):
-            buckets[_next_pow2(len(ys))].append(idx)
+            buckets[next_pow2(len(ys))].append(idx)
 
         results: List[Optional[np.ndarray]] = [None] * len(requests)
         launches = 0
@@ -186,8 +255,10 @@ class SmootherServer:
             idxs = buckets[n_pad]
             for lo in range(0, len(idxs), self.cfg.max_batch):
                 chunk = idxs[lo:lo + self.cfg.max_batch]
-                b_pad = (self.cfg.max_batch
-                         if len(idxs) > self.cfg.max_batch else len(chunk))
+                # Same pow2 width quantization as the streaming path
+                # (FlushPolicy.pad_width): one bounded executable-cache
+                # contract whether requests arrive one-shot or queued.
+                b_pad = min(next_pow2(len(chunk)), self.cfg.max_batch)
                 means, info = self.smooth_batch(
                     [requests[i] for i in chunk], n_pad, b_pad)
                 for i, m in zip(chunk, means):
@@ -207,6 +278,72 @@ class SmootherServer:
         emit(f"[serve/smoother] {len(requests)} requests in {launches} "
              f"bucket launches, {dt:.2f}s ({stats['traj_per_s']:.1f} traj/s,"
              f" {stats['mean_iterations']:.1f} mean iters)")
+        return stats
+
+    def serve_stream(self, requests: List[np.ndarray],
+                     arrivals: np.ndarray, emit=print,
+                     policy: Optional[FlushPolicy] = None) -> dict:
+        """Serve a *timestamped* request stream through the autobatching
+        queue (simulated arrival clock, measured bucket compute).
+
+        Flush knobs default to the server config (``policy`` selects
+        deadline-aware vs fill-only flushing, ``deadline_s`` /
+        ``max_wait_s`` / ``slack`` bound per-request latency); pass an
+        explicit `FlushPolicy` to sweep policies on one warm server —
+        the *smoother* config (method/n_iter/tol/...) is baked into the
+        jitted executable at construction and is deliberately not
+        re-read here. Returns the per-request results plus the latency
+        digest of `autobatch.summarize_service`.
+        """
+        cfg = self.cfg
+        if policy is None:
+            policy = FlushPolicy(kind=cfg.policy, max_batch=cfg.max_batch,
+                                 max_wait=cfg.max_wait_s, slack=cfg.slack)
+        estimator = ComputeEstimator(policy.ema_alpha,
+                                     policy.default_compute)
+        qreqs = [QueuedRequest(req_id=i, n=len(ys), nx=self.model.nx,
+                               arrival=float(t),
+                               deadline=float(t) + cfg.deadline_s,
+                               payload=ys)
+                 for i, (ys, t) in enumerate(zip(requests, arrivals))]
+        if cfg.warm:
+            n_pads = {r.signature[0] for r in qreqs}
+            b_pads = {policy.pad_width(k)
+                      for k in range(1, cfg.max_batch + 1)}
+            self.warmup(n_pads, b_pads,
+                        estimator if policy.kind == "deadline" else None)
+
+        results: List[Optional[np.ndarray]] = [None] * len(requests)
+        iters_total = 0
+
+        def execute(fl):
+            batch = [r.payload for r in fl.requests]
+            t0 = time.perf_counter()
+            means, info = self.smooth_batch(batch, fl.signature[0],
+                                            fl.b_pad)
+            dt = time.perf_counter() - t0
+            for r, m in zip(fl.requests, means):
+                results[r.req_id] = m
+            nonlocal iters_total
+            iters_total += int(np.sum(np.asarray(
+                info.iterations)[:len(batch)]))
+            return dt
+
+        service = run_service(qreqs, execute, policy, estimator)
+        stats = summarize_service(service)
+        stats.update({
+            "results": results,
+            "mean_iterations": iters_total / max(len(requests), 1),
+            "compiles": len(self.signatures_seen),
+            "records": service["records"],
+        })
+        emit(f"[serve/smoother/{policy.kind}] {stats['requests']} requests "
+             f"in {stats['launches']} launches "
+             f"(p50 {stats['latency_p50_s'] * 1e3:.1f}ms, "
+             f"p95 {stats['latency_p95_s'] * 1e3:.1f}ms, "
+             f"{stats['traj_per_s']:.1f} traj/s, "
+             f"deadline hit {stats['deadline_hit_rate']:.0%}, "
+             f"occupancy {stats['occupancy']:.2f})")
         return stats
 
 
@@ -234,7 +371,12 @@ def serve_smoother(cfg: SmootherServeConfig, emit=print) -> dict:
         truths.append(np.asarray(xs))
 
     server = SmootherServer(model, cfg)
-    stats = server.serve_requests(requests, emit=emit)
+    if cfg.arrival == "none":
+        stats = server.serve_requests(requests, emit=emit)
+    else:
+        arrivals = make_arrivals(cfg.arrival, cfg.requests, cfg.rate,
+                                 cfg.burst_size, seed=cfg.seed)
+        stats = server.serve_stream(requests, arrivals, emit=emit)
 
     # Sanity: served estimates must actually track the simulated truth.
     rmses = [float(np.sqrt(np.mean((m[1:, :2] - t[1:, :2]) ** 2)))
@@ -264,12 +406,29 @@ def main(argv=None):
                    help="smoother: use the sequential baseline pass")
     p.add_argument("--f32", action="store_true",
                    help="smoother: run in float32")
+    p.add_argument("--arrival", choices=("none", "poisson", "bursty"),
+                   default="none",
+                   help="smoother: request arrival process "
+                        "(none = one-shot batch)")
+    p.add_argument("--policy", choices=("static", "deadline"),
+                   default="static",
+                   help="smoother: bucket flush policy for streaming mode")
+    p.add_argument("--rate", type=float, default=8.0,
+                   help="smoother: offered load, requests/s")
+    p.add_argument("--burst-size", type=int, default=8)
+    p.add_argument("--deadline", type=float, default=2.0,
+                   help="smoother: per-request completion budget (s)")
+    p.add_argument("--max-wait", type=float, default=0.25,
+                   help="smoother: queue-wait cap (s)")
     args = p.parse_args(argv)
     if args.workload == "smoother":
         serve_smoother(SmootherServeConfig(
             requests=args.requests, n=args.n, max_batch=args.max_batch,
             method=args.method, n_iter=args.iters, tol=args.tol,
-            parallel=not args.sequential, f64=not args.f32))
+            parallel=not args.sequential, f64=not args.f32,
+            arrival=args.arrival, policy=args.policy, rate=args.rate,
+            burst_size=args.burst_size, deadline_s=args.deadline,
+            max_wait_s=args.max_wait))
     else:
         if args.arch is None:
             p.error("--arch is required for the decode workload")

@@ -1,0 +1,199 @@
+"""Flush-policy unit tests with a fake clock (no jax, no real time).
+
+The queue is clock-agnostic — every entry point takes ``now`` — so each
+trigger (fill, deadline, max-wait, drain) is pinned deterministically,
+plus the no-starvation guarantee for rare ``(n_pad, nx)`` signatures and
+the discrete-event driver's bookkeeping with a stub executor.
+"""
+import math
+
+import pytest
+
+from repro.launch.autobatch import (AutobatchQueue, ComputeEstimator,
+                                    FlushPolicy, QueuedRequest,
+                                    FLUSH_DEADLINE, FLUSH_DRAIN, FLUSH_FULL,
+                                    FLUSH_MAX_WAIT, make_arrivals,
+                                    next_pow2, run_service,
+                                    summarize_service)
+
+
+def req(i, n=10, nx=5, arrival=0.0, deadline=math.inf):
+    return QueuedRequest(req_id=i, n=n, nx=nx, arrival=arrival,
+                        deadline=deadline)
+
+
+def test_signature_and_pad_width():
+    assert req(0, n=10).signature == (16, 5)
+    assert req(0, n=16).signature == (16, 5)
+    pol = FlushPolicy(max_batch=8)
+    assert [pol.pad_width(k) for k in (1, 2, 3, 5, 8, 9)] == \
+        [1, 2, 4, 8, 8, 8]
+    assert next_pow2(1) == 1 and next_pow2(9) == 16
+
+
+def test_fill_triggered_flush():
+    q = AutobatchQueue(FlushPolicy(kind="deadline", max_batch=4,
+                                   max_wait=10.0))
+    for i in range(4):
+        q.submit(req(i, arrival=0.0), now=0.0)
+    flushes = q.pop_ready(now=0.0)
+    assert len(flushes) == 1
+    fl = flushes[0]
+    assert fl.reason == FLUSH_FULL
+    assert [r.req_id for r in fl.requests] == [0, 1, 2, 3]  # FIFO
+    assert fl.b_pad == 4
+    assert q.pending() == 0
+
+
+def test_fill_flush_pops_oldest_and_keeps_remainder():
+    q = AutobatchQueue(FlushPolicy(kind="deadline", max_batch=2,
+                                   max_wait=10.0))
+    for i in range(5):
+        q.submit(req(i, arrival=float(i)), now=float(i))
+    flushes = q.pop_ready(now=4.0)
+    assert [f.reason for f in flushes] == [FLUSH_FULL, FLUSH_FULL]
+    assert [r.req_id for r in flushes[0].requests] == [0, 1]
+    assert [r.req_id for r in flushes[1].requests] == [2, 3]
+    assert q.pending() == 1
+
+
+def test_deadline_triggered_flush():
+    pol = FlushPolicy(kind="deadline", max_batch=8, max_wait=100.0,
+                      slack=1.0)
+    est = ComputeEstimator(alpha=1.0)
+    est.observe((16, 5), 1, 0.3)
+    q = AutobatchQueue(pol, est)
+    q.submit(req(0, arrival=0.0, deadline=1.0), now=0.0)
+    # Flush must happen at deadline - slack * est = 0.7, not before.
+    assert q.next_due() == pytest.approx(0.7)
+    assert q.pop_ready(now=0.69) == []
+    flushes = q.pop_ready(now=0.7)
+    assert len(flushes) == 1 and flushes[0].reason == FLUSH_DEADLINE
+
+
+def test_deadline_flush_honors_tightest_not_oldest():
+    """Deadlines are arbitrary per-request: a younger request with an
+    earlier deadline must pull the flush forward past the FIFO head's."""
+    pol = FlushPolicy(kind="deadline", max_batch=8, max_wait=100.0,
+                      slack=1.0)
+    est = ComputeEstimator(alpha=1.0)
+    est.observe((16, 5), 2, 0.1)
+    q = AutobatchQueue(pol, est)
+    q.submit(req(0, arrival=0.0, deadline=10.0), now=0.0)   # FIFO head
+    q.submit(req(1, arrival=0.1, deadline=0.5), now=0.1)    # tighter
+    assert q.next_due() == pytest.approx(0.4)
+    flushes = q.pop_ready(now=0.4)
+    assert len(flushes) == 1 and flushes[0].reason == FLUSH_DEADLINE
+    assert [r.req_id for r in flushes[0].requests] == [0, 1]
+
+
+def test_max_wait_triggered_flush():
+    pol = FlushPolicy(kind="deadline", max_batch=8, max_wait=0.5)
+    q = AutobatchQueue(pol)   # no deadline => max-wait is the only timer
+    q.submit(req(0, arrival=1.0), now=1.0)
+    assert q.next_due() == pytest.approx(1.5)
+    assert q.pop_ready(now=1.49) == []
+    flushes = q.pop_ready(now=1.5)
+    assert len(flushes) == 1 and flushes[0].reason == FLUSH_MAX_WAIT
+
+
+def test_no_starvation_of_rare_signature():
+    """A lone request with an unpopular (n_pad, nx) signature must flush
+    within max_wait even while a popular bucket churns."""
+    pol = FlushPolicy(kind="deadline", max_batch=4, max_wait=0.2)
+    q = AutobatchQueue(pol)
+    q.submit(req(99, n=100, arrival=0.0), now=0.0)     # rare: (128, 5)
+    for i in range(8):                                 # popular: (16, 5)
+        q.submit(req(i, n=16, arrival=0.01), now=0.01)
+    flushes = q.pop_ready(now=0.05)
+    assert all(f.signature == (16, 5) and f.reason == FLUSH_FULL
+               for f in flushes)
+    assert q.next_due() <= 0.2
+    late = q.pop_ready(now=0.2)
+    assert len(late) == 1
+    assert late[0].signature == (128, 5)
+    assert late[0].reason == FLUSH_MAX_WAIT
+    assert late[0].requests[0].req_id == 99
+
+
+def test_static_policy_only_flushes_on_fill_or_drain():
+    q = AutobatchQueue(FlushPolicy(kind="static", max_batch=3,
+                                   max_wait=0.1))
+    for i in range(2):
+        q.submit(req(i, arrival=0.0, deadline=0.5), now=0.0)
+    assert q.next_due() == math.inf           # no timers, ever
+    assert q.pop_ready(now=1e9) == []         # deadline long gone
+    q.submit(req(2, arrival=1e9), now=1e9)
+    flushes = q.pop_ready(now=1e9)
+    assert len(flushes) == 1 and flushes[0].reason == FLUSH_FULL
+    q.submit(req(3, arrival=1e9), now=1e9)
+    drained = q.pop_ready(now=1e9, drain=True)
+    assert len(drained) == 1 and drained[0].reason == FLUSH_DRAIN
+    assert q.pending() == 0
+
+
+def test_estimator_scales_unseen_widths():
+    est = ComputeEstimator(alpha=0.5, default=0.123)
+    assert est.estimate((16, 5), 4) == pytest.approx(0.123)  # unseen sig
+    est.observe((16, 5), 4, 0.2)
+    assert est.estimate((16, 5), 4) == pytest.approx(0.2)
+    assert est.estimate((16, 5), 8) == pytest.approx(0.4)    # linear in B
+    assert est.estimate((16, 5), 2) == pytest.approx(0.1)
+    est.observe((16, 5), 4, 0.4)                             # EMA update
+    assert est.estimate((16, 5), 4) == pytest.approx(0.3)
+
+
+def test_run_service_latency_accounting():
+    """Stub executor with a fixed compute time: the driver must charge
+    queue wait on the simulated clock and serialize bucket compute."""
+    pol = FlushPolicy(kind="deadline", max_batch=2, max_wait=0.5)
+    reqs = [req(0, arrival=0.0), req(1, arrival=0.0),   # full at t=0
+            req(2, arrival=0.1)]                        # max-wait at 0.6
+    service = run_service(reqs, execute=lambda fl: 0.25, policy=pol)
+    recs = {r["req_id"]: r for r in service["records"]}
+    # Requests 0/1: flush at 0, compute 0.25 -> latency 0.25.
+    assert recs[0]["latency_s"] == pytest.approx(0.25)
+    assert recs[0]["queue_wait_s"] == pytest.approx(0.0)
+    # Request 2: timer fires at 0.6, executor free (0.25) -> done 0.85.
+    assert recs[2]["queue_wait_s"] == pytest.approx(0.5)
+    assert recs[2]["latency_s"] == pytest.approx(0.75)
+    assert [l["reason"] for l in service["launches"]] == \
+        [FLUSH_FULL, FLUSH_MAX_WAIT]
+    summary = summarize_service(service)
+    assert summary["requests"] == 3
+    assert summary["launches"] == 2
+    assert summary["latency_p95_s"] <= 0.75 + 1e-12
+    assert summary["flush_reasons"] == {FLUSH_FULL: 1, FLUSH_MAX_WAIT: 1}
+
+
+def test_run_service_backlog_serializes_executor():
+    """Two buckets due at once: the second waits for the executor."""
+    pol = FlushPolicy(kind="deadline", max_batch=2, max_wait=0.1)
+    reqs = [req(0, n=8, arrival=0.0), req(1, n=100, arrival=0.0)]
+    service = run_service(reqs, execute=lambda fl: 1.0, policy=pol)
+    starts = sorted(l["start"] for l in service["launches"])
+    assert starts == [pytest.approx(0.1), pytest.approx(1.1)]
+    lats = sorted(r["latency_s"] for r in service["records"])
+    assert lats == [pytest.approx(1.1), pytest.approx(2.1)]
+
+
+def test_static_policy_drains_at_end_of_stream():
+    pol = FlushPolicy(kind="static", max_batch=8)
+    reqs = [req(i, arrival=0.1 * i) for i in range(3)]
+    service = run_service(reqs, execute=lambda fl: 0.01, policy=pol)
+    assert len(service["records"]) == 3
+    assert [l["reason"] for l in service["launches"]] == [FLUSH_DRAIN]
+
+
+def test_make_arrivals_offered_load_and_shape():
+    pois = make_arrivals("poisson", 200, rate=50.0, seed=1)
+    burst = make_arrivals("bursty", 200, rate=50.0, burst_size=8, seed=1)
+    assert len(pois) == len(burst) == 200
+    assert (sorted(pois) == pois.tolist() and
+            sorted(burst) == burst.tolist())
+    # Equal offered load within statistical slop.
+    assert 200 / burst[-1] == pytest.approx(200 / pois[-1], rel=0.6)
+    # Bursts arrive back-to-back: repeated timestamps.
+    assert len(set(burst.tolist())) <= 200 / 8 + 1
+    with pytest.raises(ValueError):
+        make_arrivals("adversarial", 10, 1.0)

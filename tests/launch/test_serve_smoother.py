@@ -10,17 +10,11 @@ import numpy as np
 import pytest
 
 from repro.core import IteratedConfig, iterated_smoother
+from repro.launch.autobatch import FlushPolicy
 from repro.data import CoordinatedTurnConfig, make_coordinated_turn_model, \
     simulate_trajectory
 from repro.launch.serve import (SmootherServeConfig, SmootherServer,
-                                _next_pow2, serve_smoother)
-
-
-def test_next_pow2():
-    assert _next_pow2(1) == 1
-    assert _next_pow2(5) == 8
-    assert _next_pow2(8) == 8
-    assert _next_pow2(9) == 16
+                                serve_smoother)
 
 
 @pytest.fixture(scope="module")
@@ -65,3 +59,51 @@ def test_serve_smoother_end_to_end():
     assert stats["requests"] == 3
     assert stats["mean_rmse"] < 1.0
     assert len(stats["results"]) == 3
+
+
+def test_stream_policies_match_oneshot_results():
+    """The autobatch queue changes *when* buckets launch, never *what*
+    they compute: streaming results (static and deadline policies) must
+    match the one-shot bucketing path per request."""
+    model = make_coordinated_turn_model(CoordinatedTurnConfig())
+    cfg = SmootherServeConfig(requests=3, n=8, max_batch=2, n_iter=2,
+                              tol=0.0, lm_lambda=0.0, vary_lengths=False,
+                              policy="static", deadline_s=0.5,
+                              max_wait_s=0.05)
+    server = SmootherServer(model, cfg)
+    requests = [np.asarray(simulate_trajectory(
+        model, 8, jax.random.PRNGKey(20 + i))[1]) for i in range(3)]
+
+    quiet = lambda *_: None  # noqa: E731
+    arrivals = np.zeros(3)   # degenerate stream: everything at t=0
+    st_static = server.serve_stream(requests, arrivals, emit=quiet)
+    st_dead = server.serve_stream(
+        requests, np.asarray([0.0, 0.0, 0.1]), emit=quiet,
+        policy=FlushPolicy(kind="deadline", max_batch=cfg.max_batch,
+                           max_wait=cfg.max_wait_s))
+    oneshot = server.serve_requests(requests, emit=quiet)
+
+    for a, b, c in zip(oneshot["results"], st_static["results"],
+                       st_dead["results"]):
+        np.testing.assert_allclose(b, a, rtol=1e-12, atol=1e-12)
+        np.testing.assert_allclose(c, a, rtol=1e-12, atol=1e-12)
+    for stats in (st_static, st_dead):
+        assert stats["requests"] == 3
+        assert stats["launches"] >= 2          # max_batch=2 forces a split
+        assert stats["latency_p95_s"] > 0.0
+        assert 0.0 <= stats["deadline_hit_rate"] <= 1.0
+        assert stats["compiles"] <= 4          # pow2 widths: bounded cache
+
+
+def test_stream_serve_smoother_end_to_end():
+    stats = serve_smoother(
+        SmootherServeConfig(requests=4, n=8, max_batch=2, n_iter=2,
+                            tol=0.0, lm_lambda=0.0, vary_lengths=False,
+                            arrival="bursty", policy="deadline",
+                            rate=100.0, burst_size=2, deadline_s=1.0,
+                            max_wait_s=0.05),
+        emit=lambda *_: None)
+    assert stats["requests"] == 4
+    assert stats["mean_rmse"] < 1.0
+    assert all(m is not None for m in stats["results"])
+    assert stats["flush_reasons"]    # at least one flush actually fired
