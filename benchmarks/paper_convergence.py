@@ -25,7 +25,7 @@ def run(n=500, emit=print):
     for method in ("ekf", "slr"):
         # LM damping (ref [15]) is the production configuration: undamped
         # Gauss-Newton diverges beyond ~300 steps on this model (in both
-        # the parallel and sequential forms; see DESIGN.md §10).
+        # the parallel and sequential forms; see DESIGN.md §11).
         cfg = IteratedConfig(method=method, n_iter=10, parallel=True,
                              lm_lambda=1.0)
         t0 = time.perf_counter()

@@ -11,8 +11,11 @@ benches. Prints ``name,us_per_call,derived`` CSV (task spec deliverable
   smoothers_bench    — batched multi-trajectory throughput (traj/sec for
                        B in {1, 8, 64, 256}; batched vs loop vs sequential)
   serve_bench        — autobatching service latency: static vs
-                       deadline-aware flush under poisson/bursty arrivals
+                       deadline-aware flush under poisson/bursty arrivals,
+                       plus the multi-tenant mixed-scenario rows
                        (p50/p95, traj/s; snapshot BENCH_serve.json)
+  scenarios_bench    — scenario-zoo smoke bench: warm smooth per
+                       registered scenario x linearization method
 
 Roofline/dry-run numbers (full configs, production mesh) come from
 ``python -m repro.launch.dryrun --all`` — see EXPERIMENTS.md.
@@ -56,7 +59,7 @@ def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--only", type=str, default=None,
                    help="comma-separated subset: fig1,convergence,kernels,"
-                        "models,smoothers,serve")
+                        "models,smoothers,serve,scenarios")
     p.add_argument("--quick", action="store_true",
                    help="smaller sizes for CI")
     p.add_argument("--json", type=str, default=None, metavar="PATH",
@@ -95,6 +98,9 @@ def main() -> None:
     if only is None or "serve" in only:
         from benchmarks import serve_bench
         rows += serve_bench.run(quick=args.quick)
+    if only is None or "scenarios" in only:
+        from benchmarks import scenarios_bench
+        rows += scenarios_bench.run(quick=args.quick)
     if args.json:
         write_json(rows, args.json)
         print(f"# wrote {len(rows)} rows to {args.json}")

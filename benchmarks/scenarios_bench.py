@@ -1,0 +1,66 @@
+"""Scenario-zoo smoke bench: one smooth per registered scenario.
+
+One row per (scenario, linearization method): wall time of a warm
+jitted iterated smoother pass (parallel form, early stopping) plus the
+smoothed log-likelihood fit score and the parallel-vs-sequential mean
+gap — the perf-tracking complement of the correctness smoke matrix
+(`python -m repro.scenarios.smoke`). Catches a scenario whose default
+configuration quietly stops converging or regresses in cost when core
+changes land.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+N = 256
+QUICK_N = 32
+
+
+def run(n=N, n_iter=5, quick=False, emit=print):
+    from repro.core import iterated_smoother, smoothed_log_likelihood
+    from repro.scenarios import get_scenario, list_scenarios
+
+    jax.config.update("jax_enable_x64", True)
+    if quick:
+        n = QUICK_N
+
+    rows = []
+    for name in list_scenarios():
+        sc = get_scenario(name)
+        model = sc.make_model(jnp.float64)
+        xs, ys = sc.simulate(model, n, jax.random.PRNGKey(0))
+        for method in ("ekf", "slr"):
+            cfg = sc.default_config(method=method, n_iter=n_iter, tol=1e-8)
+            smooth = jax.jit(lambda ys, cfg=cfg: iterated_smoother(
+                model, ys, cfg))
+            traj = smooth(ys)
+            jax.block_until_ready(traj.mean)   # compile + warm
+            t0 = time.perf_counter()
+            traj = smooth(ys)
+            jax.block_until_ready(traj.mean)
+            dt = time.perf_counter() - t0
+            ll = float(smoothed_log_likelihood(model, ys, traj, cfg))
+            seq = iterated_smoother(model, ys,
+                                    dataclasses.replace(cfg,
+                                                        parallel=False))
+            gap = float(jnp.max(jnp.abs(traj.mean - seq.mean)))
+            default = "default" if method == sc.default_method else "alt"
+            rows.append((
+                f"scenarios/{name}/{method}/n={n}",
+                dt * 1e6,
+                f"nx={sc.nx};ny={sc.ny};loglik={ll:.1f};"
+                f"par_seq_gap={gap:.2e};role={default}"))
+            assert np.all(np.isfinite(np.asarray(traj.mean))), name
+
+    for name_, us, derived in rows:
+        emit(f"{name_},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

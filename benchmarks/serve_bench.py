@@ -10,6 +10,12 @@ arrival trace), reporting per-request latency percentiles (queue wait is
 simulated-clock, bucket compute is measured wall time; see
 `repro.launch.autobatch`), throughput, launch count, and occupancy.
 
+The `serve/mt/...` rows run the multi-tenant mix (DESIGN.md §7): three
+registry scenarios with distinct SLO classes behind one queue under
+bursty arrivals, x {static, deadline}, over one shared
+`MultiTenantServer` — tracking the per-tenant p95 and deadline-hit
+breakdown of mixed-model traffic.
+
 ``us_per_call`` for `serve/...` rows is the **p95 latency** in
 microseconds; the `serve/p95-win/...` rows derive the static/deadline
 p95 ratio — the acceptance metric tracked in `BENCH_serve.json`
@@ -37,6 +43,59 @@ def _settings(quick: bool):
                 ("bursty", "bursty", 12.0, 4),
                 ("bursty-heavy", "bursty", 32.0, 6))
     return settings[:2] if quick else settings
+
+
+TENANTS = ("coordinated_turn:standard", "bearings_only:standard",
+           "pendulum:gold")
+
+
+def run_multitenant(requests, n, max_batch, rate, burst_size, emit=print):
+    """Mixed-scenario stream through one shared `MultiTenantServer`,
+    {static, deadline} flush policies over an identical arrival trace."""
+    from repro.launch.autobatch import FlushPolicy, make_arrivals
+    from repro.launch.serve import (MultiTenantServer, SmootherServeConfig,
+                                    TenantSpec, make_tenant_fleet)
+
+    base = SmootherServeConfig(
+        requests=requests, n=n, max_batch=max_batch, n_iter=3, tol=1e-6,
+        max_wait_s=0.15)
+    specs = [TenantSpec.parse(s) for s in TENANTS]
+    server = MultiTenantServer(specs, base)
+
+    # The production driver's fleet-generation path, so bench and
+    # service can't drift.
+    fleet, _ = make_tenant_fleet(server, requests, n, seed=base.seed)
+    arrivals = make_arrivals("bursty", requests, rate, burst_size,
+                             seed=base.seed)
+
+    rows = []
+    p95 = {}
+    for policy in ("static", "deadline"):
+        stats = server.serve_stream(
+            fleet, arrivals, emit=lambda *_: None,
+            policy=FlushPolicy(kind=policy, max_batch=max_batch,
+                               max_wait=base.max_wait_s,
+                               slack=base.slack))
+        assert all(m is not None for m in stats["results"])
+        p95[policy] = stats["latency_p95_s"]
+        per_tenant = ";".join(
+            f"{t}_p95_ms={d['latency_p95_s'] * 1e3:.2f};"
+            f"{t}_hit={d['deadline_hit_rate']:.2f}"
+            for t, d in sorted(stats.get("per_tenant", {}).items()))
+        rows.append((f"serve/mt/{policy}/bursty/R={requests}/n={n}",
+                     stats["latency_p95_s"] * 1e6,
+                     f"tenants={len(server.specs)};"
+                     f"p50_ms={stats['latency_p50_s'] * 1e3:.2f};"
+                     f"p95_ms={stats['latency_p95_s'] * 1e3:.2f};"
+                     f"deadline_hit={stats['deadline_hit_rate']:.2f};"
+                     f"occupancy={stats['occupancy']:.2f};"
+                     f"launches={stats['launches']};{per_tenant}"))
+    rows.append((f"serve/mt/p95-win/bursty/R={requests}/n={n}",
+                 p95["deadline"] * 1e6,
+                 f"speedup={p95['static'] / p95['deadline']:.2f}x"))
+    for name, us, derived in rows:
+        emit(f"{name},{us:.1f},{derived}")
+    return rows
 
 
 def run(requests=REQUESTS, n=N, max_batch=MAX_BATCH, quick=False,
@@ -96,6 +155,12 @@ def run(requests=REQUESTS, n=N, max_batch=MAX_BATCH, quick=False,
 
     for name, us, derived in rows:
         emit(f"{name},{us:.1f},{derived}")
+
+    # Multi-tenant mix (quick shrinks the stream like the single-tenant
+    # runs; burst size spans tenants so buckets actually compete).
+    rows += run_multitenant(
+        requests=requests, n=n, max_batch=max_batch,
+        rate=12.0 if not quick else 8.0, burst_size=4, emit=emit)
     return rows
 
 

@@ -9,27 +9,27 @@ against the sequential baseline — same posterior, logarithmic span.
 import jax
 import jax.numpy as jnp
 
-from repro.core import IteratedConfig, iterated_smoother
-from repro.data import (CoordinatedTurnConfig, make_coordinated_turn_model,
-                        simulate_trajectory)
+from repro.core import iterated_smoother
+from repro.scenarios import get_scenario
 
 
 def main():
-    model = make_coordinated_turn_model(CoordinatedTurnConfig(),
-                                        dtype=jnp.float32)
-    xs, ys = simulate_trajectory(model, 400, jax.random.PRNGKey(0))
+    # The registry scenario carries the model factory, simulator, and
+    # production smoother defaults (method, damping, model_id).
+    scenario = get_scenario("coordinated_turn")
+    model = scenario.make_model(dtype=jnp.float32)
+    xs, ys = scenario.simulate(model, 400, jax.random.PRNGKey(0))
     print(f"simulated {ys.shape[0]} bearings-only measurements")
 
-    # Levenberg-Marquardt damping (paper ref [15]) keeps Gauss-Newton
-    # convergent on long horizons; undamped IEKS diverges for n >~ 300 on
-    # this model (in parallel AND sequential form — it is an optimization
-    # property, not a parallelization artifact; see DESIGN.md).
+    # Levenberg-Marquardt damping (paper ref [15], the scenario default)
+    # keeps Gauss-Newton convergent on long horizons; undamped IEKS
+    # diverges for n >~ 300 on this model (in parallel AND sequential
+    # form — it is an optimization property, not a parallelization
+    # artifact; see DESIGN.md).
     sm_par = iterated_smoother(
-        model, ys, IteratedConfig(method="ekf", n_iter=10, parallel=True,
-                                  lm_lambda=1.0))
+        model, ys, scenario.default_config(n_iter=10, parallel=True))
     sm_seq = iterated_smoother(
-        model, ys, IteratedConfig(method="ekf", n_iter=10, parallel=False,
-                                  lm_lambda=1.0))
+        model, ys, scenario.default_config(n_iter=10, parallel=False))
 
     rmse = jnp.sqrt(jnp.mean((sm_par.mean[1:, :2] - xs[1:, :2]) ** 2))
     gap = jnp.max(jnp.abs(sm_par.mean - sm_seq.mean))

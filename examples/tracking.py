@@ -10,9 +10,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import IteratedConfig, iterated_smoother
-from repro.data import (CoordinatedTurnConfig, make_coordinated_turn_model,
-                        simulate_trajectory)
+from repro.core import iterated_smoother
+from repro.scenarios import get_scenario
 
 
 def rmse(est, truth):
@@ -23,26 +22,29 @@ def main():
     p = argparse.ArgumentParser()
     p.add_argument("--n", type=int, default=1000)
     p.add_argument("--iters", type=int, default=10)
+    p.add_argument("--scenario", default="coordinated_turn",
+                   help="registry scenario name (position RMSE assumes a "
+                        "tracking scenario)")
     args = p.parse_args()
 
-    model = make_coordinated_turn_model(CoordinatedTurnConfig(),
-                                        dtype=jnp.float32)
-    xs, ys = simulate_trajectory(model, args.n, jax.random.PRNGKey(7))
+    scenario = get_scenario(args.scenario)
+    model = scenario.make_model(dtype=jnp.float32)
+    xs, ys = scenario.simulate(model, args.n, jax.random.PRNGKey(7))
 
     # Undamped IEKS/IPLS diverge on horizons beyond ~300 steps of this
     # model (Gauss-Newton property; paper ref [15]) — the damped rows show
-    # the production-ready configuration.
+    # the production-ready configuration (the scenario default).
     for label, cfg in [
-        ("IEKS  (Taylor, undamped)", IteratedConfig(
-            method="ekf", n_iter=args.iters, parallel=True)),
-        ("IPLS  (cubature SLR)    ", IteratedConfig(
-            method="slr", n_iter=args.iters, parallel=True)),
-        ("LM-IEKS (damped, 1.0)   ", IteratedConfig(
-            method="ekf", n_iter=args.iters, parallel=True,
-            lm_lambda=1.0)),
-        ("LM-IEKS + Pallas combine", IteratedConfig(
-            method="ekf", n_iter=args.iters, parallel=True,
-            lm_lambda=1.0, combine_impl="pallas")),
+        ("IEKS  (Taylor, undamped)", scenario.default_config(
+            method="ekf", n_iter=args.iters, lm_lambda=0.0)),
+        ("IPLS  (cubature SLR)    ", scenario.default_config(
+            method="slr", sigma_scheme="cubature", n_iter=args.iters,
+            lm_lambda=0.0)),
+        ("LM-IEKS (damped, 1.0)   ", scenario.default_config(
+            method="ekf", n_iter=args.iters, lm_lambda=1.0)),
+        ("LM-IEKS + Pallas combine", scenario.default_config(
+            method="ekf", n_iter=args.iters, lm_lambda=1.0,
+            combine_impl="pallas")),
     ]:
         t0 = time.perf_counter()
         sm, hist = iterated_smoother(model, ys, cfg, return_history=True)

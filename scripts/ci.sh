@@ -1,12 +1,15 @@
 #!/usr/bin/env bash
 # Tier-1 CI entry point: the full test suite (pytest collects tests/
 # recursively — the PR 3 additions tests/core/test_batched_parity.py and
-# tests/launch/test_autobatch.py ride in tier-1) plus a quick pass over
+# tests/launch/test_autobatch.py ride in tier-1, as do the PR 4
+# tests/scenarios/ and tests/launch/test_multitenant.py), then the
+# scenario smoke matrix (every registered scenario x both
+# linearizations, tiny n — the model-zoo gate), then a quick pass over
 # the perf-critical benchmark paths (paper fig1 + kernels + batched
-# smoother throughput + autobatch serving), so a PR that regresses a hot
-# path fails here, not three PRs later. The full benchmark suite exceeds
-# the CI budget on CPU; --quick shrinks problem sizes, and `timeout`
-# enforces a hard ceiling.
+# smoother throughput + autobatch serving + scenario zoo), so a PR that
+# regresses a hot path fails here, not three PRs later. The full
+# benchmark suite exceeds the CI budget on CPU; --quick shrinks problem
+# sizes, and `timeout` enforces a hard ceiling.
 #
 #   scripts/ci.sh [pytest args...]
 set -euo pipefail
@@ -22,8 +25,12 @@ BENCH_BUDGET="${CI_BENCH_BUDGET:-600}"  # seconds
 echo "== tier-1 tests (budget ${TEST_BUDGET}s) =="
 timeout "${TEST_BUDGET}" python -m pytest -x -q "$@"
 
+echo "== scenario smoke matrix (every scenario x both linearizations) =="
+timeout 600 python -m repro.scenarios.smoke --n 24 --iters 3
+
 echo "== quick perf paths (budget ${BENCH_BUDGET}s) =="
 BENCH_OUT="$(mktemp -d)/BENCH_ci_quick.json"
 timeout "${BENCH_BUDGET}" python -m benchmarks.run \
-    --quick --only fig1,kernels,smoothers,serve --json "${BENCH_OUT}"
+    --quick --only fig1,kernels,smoothers,serve,scenarios \
+    --json "${BENCH_OUT}"
 echo "ci: OK (bench json: ${BENCH_OUT})"

@@ -37,7 +37,8 @@ from .parallel import (filtering_elements, smoothing_elements,
                        parallel_filter_smoother_batched)
 from .iterated import (IteratedConfig, IterationInfo, iterated_smoother,
                        iterated_smoother_batched, ieks, ipls,
-                       initial_trajectory, initial_trajectory_batched)
+                       initial_trajectory, initial_trajectory_batched,
+                       smoothed_log_likelihood)
 from .scan import (associative_scan, sharded_associative_scan,
                    device_exclusive_scan, linear_recurrence_scan,
                    linear_recurrence_combine, LinearRecurrenceElement)
@@ -69,6 +70,7 @@ __all__ = [
     "IteratedConfig", "IterationInfo", "iterated_smoother",
     "iterated_smoother_batched", "ieks", "ipls",
     "initial_trajectory", "initial_trajectory_batched",
+    "smoothed_log_likelihood",
     "associative_scan", "sharded_associative_scan", "device_exclusive_scan",
     "linear_recurrence_scan", "linear_recurrence_combine",
     "LinearRecurrenceElement",

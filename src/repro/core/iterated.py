@@ -33,7 +33,8 @@ from .linearization import (linearize_model_slr, linearize_model_slr_batched,
                             linearize_model_taylor,
                             linearize_model_taylor_batched)
 from .sigma_points import SigmaScheme, get_scheme
-from .types import Gaussian, LinearizedSSM, StateSpaceModel
+from .types import (Gaussian, LinearizedSSM, StateSpaceModel, bmm, bmv,
+                    mvn_logpdf)
 
 jtm = jax.tree_util.tree_map
 
@@ -48,6 +49,7 @@ class IteratedConfig:
     combine_impl: str = "auto"      # "auto" | "jnp" | "fused" | "pallas"
     jitter: float = 0.0
     tol: float = 0.0                # early-stop mean-delta tol (0 = fixed M)
+    model_id: str = ""              # scenario content hash (registry tenants)
 
     def resolved_combine_impl(self, batched: bool) -> str:
         """"auto" = textbook vmap for single trajectories, the fused
@@ -62,7 +64,11 @@ class IteratedConfig:
         The serving queue (launch/autobatch.py) jit-caches one batched
         smoother executable per (config, time bucket, batch width,
         state dim); this is the key its warmup and compile-count
-        bookkeeping use. Frozen config => the tuple is hashable.
+        bookkeeping use. Frozen config => the tuple is hashable, and
+        ``model_id`` (the scenario content hash) rides inside the
+        config, so multi-tenant serving cannot collide two models'
+        executables — this is the single bucketing contract shared by
+        `launch/serve.py` and `launch/autobatch.py` (DESIGN.md §7).
         """
         return (self, int(n_pad), int(b_pad), int(nx))
 
@@ -303,6 +309,47 @@ def iterated_smoother_batched(model: StateSpaceModel, ys: jnp.ndarray,
         hist = jnp.where(done[:, None, None, None], hist, traj.mean[None])
     info = IterationInfo(iterations=iters, final_delta=delta)
     return _pack_result(traj, hist, info, return_history, return_info)
+
+
+def smoothed_log_likelihood(model: StateSpaceModel, ys: jnp.ndarray,
+                            traj: Gaussian,
+                            cfg: IteratedConfig = IteratedConfig(),
+                            per_step: bool = False) -> jnp.ndarray:
+    """Measurement log-likelihood under the smoothed posterior.
+
+    For each step the observation is scored against its posterior
+    predictive under the linearized model at ``traj`` (the same
+    linearization family the smoother iterated with —
+    ``cfg.method``/``cfg.sigma_scheme``):
+
+        y_k ~ N(H_k m_k + d_k,  H_k P_k H_k^T + Rp_k)
+
+    summed over time (``per_step=True`` returns the per-step terms
+    instead — serving uses this to mask padded steps before summing).
+    Shape-polymorphic: ``ys [n, ny]`` with ``traj [n+1, ...]`` gives a
+    scalar; ``ys [B, n, ny]`` with ``traj [B, n+1, ...]`` gives ``[B]``
+    (per-trajectory fit scores). This is the "fit score" the scenario
+    registry asserts statistical sanity with and the smoother service
+    returns per request.
+    """
+    batched = ys.ndim == 3
+    scheme = (get_scheme(cfg.sigma_scheme, model.nx)
+              if cfg.method == "slr" else None)
+    if cfg.method == "ekf":
+        lin = (linearize_model_taylor_batched(model, traj.mean) if batched
+               else linearize_model_taylor(model, traj.mean))
+    elif cfg.method == "slr":
+        lin = (linearize_model_slr_batched(model, traj, scheme, cfg.jitter)
+               if batched
+               else linearize_model_slr(model, traj, scheme, cfg.jitter))
+    else:
+        raise ValueError(f"unknown method {cfg.method!r}")
+    mean_post = traj.mean[..., 1:, :]
+    cov_post = traj.cov[..., 1:, :, :]
+    y_mean = bmv(lin.H, mean_post) + lin.d
+    y_cov = bmm(bmm(lin.H, cov_post), jnp.swapaxes(lin.H, -1, -2)) + lin.Rp
+    lls = mvn_logpdf(ys, y_mean, y_cov)
+    return lls if per_step else jnp.sum(lls, axis=-1)
 
 
 def ieks(model, ys, n_iter: int = 10, parallel_mode: bool = True, **kw):

@@ -60,7 +60,7 @@ def linearize_slr(phi: Callable, m: jnp.ndarray, P: jnp.ndarray,
 def linearize_model_taylor(model: StateSpaceModel, traj_means: jnp.ndarray
                            ) -> LinearizedSSM:
     """Build the linearized SSM by Taylor expansion around a nominal
-    trajectory ``traj_means [n+1, nx]`` (rows 0..n; see DESIGN.md §10)."""
+    trajectory ``traj_means [n+1, nx]`` (rows 0..n; see DESIGN.md §11)."""
     n = traj_means.shape[0] - 1
     Fs, cs, _ = jax.vmap(lambda m: linearize_taylor(model.f, m))(traj_means[:-1])
     Hs, ds, _ = jax.vmap(lambda m: linearize_taylor(model.h, m))(traj_means[1:])

@@ -1,6 +1,6 @@
 """Core pytree types for the parallel iterated Kalman smoothers.
 
-Conventions (see DESIGN.md §10):
+Conventions (see DESIGN.md §11):
   * ``n`` measurements ``y_{1:n}``; states ``x_{0:n}``.
   * Transition params ``F_k, c_k, Lambda_k`` map ``x_k -> x_{k+1}`` and are
     stored for ``k = 0..n-1`` (leading dim ``n``).

@@ -1,115 +1,10 @@
-"""Coordinated-turn model with bearings-only measurements (paper §5).
+"""Backward-compatibility shim: the coordinated-turn model moved to the
+scenario registry (`repro.scenarios.coordinated_turn`); the generic
+simulator lives in `repro.scenarios.base`. Import from `repro.scenarios`
+in new code."""
+from repro.scenarios.base import simulate_trajectory
+from repro.scenarios.coordinated_turn import (CoordinatedTurnConfig,
+                                              make_coordinated_turn_model)
 
-The paper evaluates on the coordinated-turn / bearings-only model of
-Bar-Shalom & Li (ref [21]), as used in Särkkä & Svensson 2020 (ref [15]):
-state ``x = [p_x, p_y, v_x, v_y, omega]`` with turn-rate dynamics, observed
-through bearings from two fixed sensors.
-"""
-from __future__ import annotations
-
-import dataclasses
-from typing import Tuple
-
-import jax
-import jax.numpy as jnp
-
-from repro.core.types import StateSpaceModel
-
-
-@dataclasses.dataclass(frozen=True)
-class CoordinatedTurnConfig:
-    dt: float = 0.01
-    q1: float = 0.1          # position/velocity process noise PSD
-    q2: float = 0.1          # turn-rate process noise PSD
-    r_std: float = 0.05      # bearing noise std (radians)
-    # Sensors flank the trajectory; keeping them off the flight path avoids
-    # the bearings singularity (range -> 0) that destabilizes plain
-    # Gauss-Newton (cf. paper ref [15] on the need for damped variants).
-    sensor1: Tuple[float, float] = (-1.5, 0.5)
-    sensor2: Tuple[float, float] = (1.0, -1.0)
-    m0: Tuple[float, ...] = (0.1, 0.2, 1.0, 0.0, 0.0)
-    p0_diag: Tuple[float, ...] = (0.1, 0.1, 0.1, 0.1, 1.0)
-
-
-def _turn_dynamics(dt: float):
-    """Exact coordinated-turn transition, smooth at omega -> 0.
-
-    Uses guarded denominators so the Taylor branch keeps `jax.jacfwd`
-    NaN-free (both `where` branches are evaluated under AD).
-    """
-
-    def f(x):
-        px, py, vx, vy, w = x
-        wd = w * dt
-        small = jnp.abs(wd) < 1e-6
-        safe_wd = jnp.where(small, 1.0, wd)
-        # sin(w dt)/w and (1 - cos(w dt))/w with series fallbacks.
-        swd = jnp.where(small, dt * (1.0 - wd * wd / 6.0),
-                        jnp.sin(safe_wd) / safe_wd * dt)
-        cwd = jnp.where(small, dt * (wd / 2.0 - wd ** 3 / 24.0),
-                        (1.0 - jnp.cos(safe_wd)) / safe_wd * dt)
-        cos_wd = jnp.cos(wd)
-        sin_wd = jnp.sin(wd)
-        return jnp.stack([
-            px + swd * vx - cwd * vy,
-            py + cwd * vx + swd * vy,
-            cos_wd * vx - sin_wd * vy,
-            sin_wd * vx + cos_wd * vy,
-            w,
-        ])
-
-    return f
-
-
-def _bearings(sensor1, sensor2, dtype):
-    s1 = jnp.asarray(sensor1, dtype=dtype)
-    s2 = jnp.asarray(sensor2, dtype=dtype)
-
-    def h(x):
-        return jnp.stack([
-            jnp.arctan2(x[1] - s1[1], x[0] - s1[0]),
-            jnp.arctan2(x[1] - s2[1], x[0] - s2[0]),
-        ])
-
-    return h
-
-
-def make_coordinated_turn_model(cfg: CoordinatedTurnConfig = CoordinatedTurnConfig(),
-                                dtype=jnp.float64) -> StateSpaceModel:
-    dt, q1, q2 = cfg.dt, cfg.q1, cfg.q2
-    Q = jnp.array([
-        [q1 * dt ** 3 / 3, 0, q1 * dt ** 2 / 2, 0, 0],
-        [0, q1 * dt ** 3 / 3, 0, q1 * dt ** 2 / 2, 0],
-        [q1 * dt ** 2 / 2, 0, q1 * dt, 0, 0],
-        [0, q1 * dt ** 2 / 2, 0, q1 * dt, 0],
-        [0, 0, 0, 0, q2 * dt],
-    ], dtype=dtype)
-    R = (cfg.r_std ** 2) * jnp.eye(2, dtype=dtype)
-    m0 = jnp.asarray(cfg.m0, dtype=dtype)
-    P0 = jnp.diag(jnp.asarray(cfg.p0_diag, dtype=dtype))
-    return StateSpaceModel(f=_turn_dynamics(dt),
-                           h=_bearings(cfg.sensor1, cfg.sensor2, dtype),
-                           Q=Q, R=R, m0=m0, P0=P0)
-
-
-def simulate_trajectory(model: StateSpaceModel, n: int, key: jax.Array
-                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Sample ``x_{0:n}`` and ``y_{1:n}`` from the model. Returns
-    ``(xs [n+1, nx], ys [n, ny])``."""
-    kx0, kq, kr = jax.random.split(key, 3)
-    dtype = model.m0.dtype
-    cholQ = jnp.linalg.cholesky(model.Q)
-    cholR = jnp.linalg.cholesky(model.R)
-    cholP0 = jnp.linalg.cholesky(model.P0)
-    x0 = model.m0 + cholP0 @ jax.random.normal(kx0, (model.nx,), dtype)
-    qs = jax.random.normal(kq, (n, model.nx), dtype) @ cholQ.T
-    rs = jax.random.normal(kr, (n, model.ny), dtype) @ cholR.T
-
-    def step(x, noise):
-        q, r = noise
-        x_next = model.f(x) + q
-        y = model.h(x_next) + r
-        return x_next, (x_next, y)
-
-    _, (xs, ys) = jax.lax.scan(step, x0, (qs, rs))
-    return jnp.concatenate([x0[None], xs], axis=0), ys
+__all__ = ["CoordinatedTurnConfig", "make_coordinated_turn_model",
+           "simulate_trajectory"]

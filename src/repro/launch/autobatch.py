@@ -3,9 +3,11 @@
 The batched smoothers (DESIGN.md §Batching) amortize fixed launch cost
 across B trajectories, but a *service* does not see B requests at once —
 it sees a stream. The queue here decides **when to stop waiting**: each
-request joins a ``(n_pad, nx)`` bucket (time axis padded to the next
-power of two, exactly the static policy of the one-shot server), and a
-bucket is flushed when any of
+request joins a ``(model_id, method, n_pad, nx)`` bucket (time axis
+padded to the next power of two, exactly the static policy of the
+one-shot server; ``model_id``/``method`` are the tenant dimension —
+requests against different scenario models or linearization methods
+never share a launch, DESIGN.md §7), and a bucket is flushed when any of
 
   * **full**     — it reached ``max_batch`` lanes (both policies);
   * **deadline** — waiting any longer would make the *tightest* deadline
@@ -17,6 +19,14 @@ bucket is flushed when any of
 fires. ``kind="static"`` disables the two timer conditions and is the
 fill-only streaming extension of the PR 2 one-shot bucketing — the
 baseline that `benchmarks/serve_bench.py` compares against.
+
+When several buckets are due at one instant, launch order on the serial
+executor is SLO-aware: timer-triggered (deadline/max-wait) flushes run
+before fill-triggered ones, and ties break on the bucket's most urgent
+request priority (`SLOClass.priority`; lower = more urgent). Flushes
+from one bucket keep FIFO order regardless — urgency is ranked at
+bucket granularity, never reordering a bucket's older chunk behind its
+newer remainder.
 
 Compute-time prediction is a per-signature EMA of measured bucket wall
 times (`ComputeEstimator`), seeded by server warmup and scaled linearly
@@ -43,16 +53,59 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-Signature = Tuple[int, int]  # (n_pad, nx)
+Signature = Tuple[str, str, int, int]  # (model_id, method, n_pad, nx)
 
 FLUSH_FULL = "full"
 FLUSH_DEADLINE = "deadline"
 FLUSH_MAX_WAIT = "max_wait"
 FLUSH_DRAIN = "drain"
 
+# Launch-order rank when multiple buckets are due at one instant:
+# timer-triggered flushes (a deadline or starvation bound is firing)
+# beat fill-triggered ones; drain is the end-of-stream sweep.
+_REASON_RANK = {FLUSH_DEADLINE: 0, FLUSH_MAX_WAIT: 0, FLUSH_FULL: 1,
+                FLUSH_DRAIN: 2}
+
 
 def next_pow2(n: int) -> int:
     return 1 << (int(n) - 1).bit_length()
+
+
+def pad_width(k: int, max_batch: int) -> int:
+    """Batch padding width for ``k`` requests: next power of two, clamped
+    to ``max_batch``. THE width quantization — both the streaming queue
+    (`FlushPolicy.pad_width`) and the one-shot server
+    (`serve.SmootherServer.serve_requests`) route through this function,
+    so the jit-signature space is O(log2 max_batch) per time bucket and
+    cannot drift between serving paths or tenants."""
+    return min(next_pow2(max(k, 1)), max_batch)
+
+
+def bucket_signature(model_id: str, method: str, n: int, nx: int
+                     ) -> Signature:
+    """THE bucket key: ``(model_id, method, next_pow2(n), nx)``. Shared
+    by `QueuedRequest.signature`, the one-shot server bucketing, and
+    warmup — the single key-construction path of DESIGN.md §7."""
+    return (str(model_id), str(method), next_pow2(n), int(nx))
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOClass:
+    """One priority/SLO tier: launch priority (lower = more urgent) and
+    the default per-request completion budget."""
+
+    name: str
+    priority: int
+    deadline_s: float
+
+
+#: The serving tiers (DESIGN.md §7). ``batch`` has no deadline — only
+#: the ``max_wait`` starvation bound flushes its buckets under load.
+SLO_CLASSES = {
+    "gold": SLOClass("gold", priority=0, deadline_s=0.5),
+    "standard": SLOClass("standard", priority=1, deadline_s=2.0),
+    "batch": SLOClass("batch", priority=2, deadline_s=math.inf),
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,9 +113,11 @@ class QueuedRequest:
     """One smoothing request as the queue sees it.
 
     ``payload`` (the measurements) is opaque to the queue — policy
-    decisions use only length, state dim, arrival time, and deadline.
-    ``deadline`` is the *absolute* completion target in simulated
-    seconds (``math.inf`` = none).
+    decisions use only the bucket signature fields, arrival time,
+    deadline, and priority. ``deadline`` is the *absolute* completion
+    target in simulated seconds (``math.inf`` = none). ``tenant`` is a
+    label for per-tenant accounting only; routing isolation comes from
+    ``model_id``/``method`` being part of the signature.
     """
 
     req_id: int
@@ -71,10 +126,15 @@ class QueuedRequest:
     arrival: float
     deadline: float = math.inf
     payload: object = None
+    model_id: str = ""
+    method: str = "ekf"
+    tenant: str = ""
+    priority: int = SLO_CLASSES["standard"].priority
 
     @property
     def signature(self) -> Signature:
-        return (next_pow2(self.n), self.nx)
+        return bucket_signature(self.model_id, self.method, self.n,
+                                self.nx)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,9 +155,9 @@ class FlushPolicy:
             raise ValueError("max_batch must be >= 1")
 
     def pad_width(self, k: int) -> int:
-        """Batch padding width for ``k`` requests: next power of two,
-        clamped to ``max_batch`` — bounds the jit-signature space."""
-        return min(next_pow2(max(k, 1)), self.max_batch)
+        """Batch padding width for ``k`` requests (the shared module-level
+        `pad_width` quantization, bound to this policy's ``max_batch``)."""
+        return pad_width(k, self.max_batch)
 
 
 class ComputeEstimator:
@@ -134,13 +194,16 @@ class ComputeEstimator:
 
 @dataclasses.dataclass
 class BucketFlush:
-    """One launch decision: which requests, at what padded width, why."""
+    """One launch decision: which requests, at what padded width, why.
+    ``priority`` is the most urgent request priority in the flush
+    (launch-order tiebreak on the serial executor)."""
 
     signature: Signature
     requests: List[QueuedRequest]
     b_pad: int
     reason: str
     at: float
+    priority: int = SLO_CLASSES["standard"].priority
 
 
 class AutobatchQueue:
@@ -199,28 +262,41 @@ class AutobatchQueue:
         reqs = [bucket.popleft() for _ in range(min(k, len(bucket)))]
         return BucketFlush(signature=sig, requests=reqs,
                            b_pad=self.policy.pad_width(len(reqs)),
-                           reason=reason, at=now)
+                           reason=reason, at=now,
+                           priority=min(r.priority for r in reqs))
 
     def pop_ready(self, now: float, drain: bool = False
                   ) -> List[BucketFlush]:
-        """All flushes triggered at ``now`` (FIFO inside a bucket,
-        buckets in sorted-signature order for determinism). With
-        ``drain=True`` every remaining request flushes (end of stream)."""
-        flushes: List[BucketFlush] = []
+        """All flushes triggered at ``now``, in SLO-aware launch order:
+        buckets with a timer-triggered flush (deadline/max-wait) come
+        before fill-only buckets, ties break on the bucket's most urgent
+        request priority, then signature (determinism). FIFO holds
+        inside a bucket — urgency is ranked per bucket, so a bucket's
+        older full chunk is never reordered behind its newer remainder.
+        With ``drain=True`` every remaining request flushes (end of
+        stream)."""
+        groups: List[Tuple[Tuple[int, int, Signature], List[BucketFlush]]] \
+            = []
         for sig in sorted(self._buckets):
             bucket = self._buckets[sig]
+            popped: List[BucketFlush] = []
             while len(bucket) >= self.policy.max_batch:
-                flushes.append(self._pop_chunk(
+                popped.append(self._pop_chunk(
                     sig, self.policy.max_batch, FLUSH_FULL, now))
-            if not bucket:
-                continue
-            due, rule = self._due(sig)
-            if due <= now:
-                flushes.append(self._pop_chunk(sig, len(bucket), rule, now))
-            elif drain:
-                flushes.append(self._pop_chunk(
-                    sig, len(bucket), FLUSH_DRAIN, now))
-        return flushes
+            if bucket:
+                due, rule = self._due(sig)
+                if due <= now:
+                    popped.append(self._pop_chunk(sig, len(bucket), rule,
+                                                  now))
+                elif drain:
+                    popped.append(self._pop_chunk(
+                        sig, len(bucket), FLUSH_DRAIN, now))
+            if popped:
+                rank = min(_REASON_RANK[f.reason] for f in popped)
+                prio = min(f.priority for f in popped)
+                groups.append(((rank, prio, sig), popped))
+        groups.sort(key=lambda g: g[0])
+        return [f for _, popped in groups for f in popped]
 
 
 # ---------------------------------------------------------------------------
@@ -280,6 +356,9 @@ def run_service(requests: Sequence[QueuedRequest],
                 "signature": fl.signature, "b": len(fl.requests),
                 "b_pad": fl.b_pad, "reason": fl.reason, "at": fl.at,
                 "start": start, "compute_s": dt,
+                "priority": fl.priority,
+                "req_ids": [r.req_id for r in fl.requests],
+                "tenants": sorted({r.tenant for r in fl.requests}),
             })
             for r in fl.requests:
                 records.append({
@@ -288,6 +367,7 @@ def run_service(requests: Sequence[QueuedRequest],
                     "queue_wait_s": start - r.arrival,
                     "compute_s": dt, "reason": fl.reason,
                     "deadline_met": done <= r.deadline,
+                    "tenant": r.tenant,
                 })
 
     while i < n or queue.pending():
@@ -309,11 +389,32 @@ def run_service(requests: Sequence[QueuedRequest],
     return {"records": records, "launches": launches}
 
 
-def summarize_service(service: dict) -> dict:
-    """Latency/throughput digest of a `run_service` result."""
-    records, launches = service["records"], service["launches"]
+def _latency_digest(records: Sequence[dict]) -> dict:
     lat = np.asarray([r["latency_s"] for r in records])
     wait = np.asarray([r["queue_wait_s"] for r in records])
+    return {
+        "requests": len(records),
+        "latency_p50_s": float(np.percentile(lat, 50)) if len(lat) else 0.0,
+        "latency_p95_s": float(np.percentile(lat, 95)) if len(lat) else 0.0,
+        "latency_mean_s": float(lat.mean()) if len(lat) else 0.0,
+        "queue_wait_p95_s": (float(np.percentile(wait, 95))
+                             if len(wait) else 0.0),
+        "deadline_hit_rate": (float(np.mean([r["deadline_met"]
+                                             for r in records]))
+                              if len(records) else 1.0),
+    }
+
+
+def summarize_service(service: dict) -> dict:
+    """Latency/throughput digest of a `run_service` result.
+
+    When the request stream is multi-tenant (records carry more than one
+    distinct ``tenant`` label), a ``per_tenant`` dict of sub-digests —
+    per-tenant p50/p95 latency and deadline-hit rate — rides along with
+    the global numbers.
+    """
+    records, launches = service["records"], service["launches"]
+    lat = np.asarray([r["latency_s"] for r in records])
     arrivals = np.asarray([r["arrival"] for r in records])
     done = arrivals + lat
     span = float(done.max() - arrivals.min()) if len(lat) else 0.0
@@ -322,18 +423,17 @@ def summarize_service(service: dict) -> dict:
         reasons[l["reason"]] = reasons.get(l["reason"], 0) + 1
     occupancy = (float(np.mean([l["b"] / l["b_pad"] for l in launches]))
                  if launches else 0.0)
-    return {
-        "requests": len(records),
+    out = {
+        **_latency_digest(records),
         "launches": len(launches),
-        "latency_p50_s": float(np.percentile(lat, 50)) if len(lat) else 0.0,
-        "latency_p95_s": float(np.percentile(lat, 95)) if len(lat) else 0.0,
-        "latency_mean_s": float(lat.mean()) if len(lat) else 0.0,
-        "queue_wait_p95_s": (float(np.percentile(wait, 95))
-                             if len(wait) else 0.0),
         "traj_per_s": len(records) / span if span > 0 else 0.0,
-        "deadline_hit_rate": (float(np.mean([r["deadline_met"]
-                                             for r in records]))
-                              if records else 1.0),
         "occupancy": occupancy,
         "flush_reasons": reasons,
     }
+    tenants = sorted({r.get("tenant", "") for r in records})
+    if len(tenants) > 1:
+        out["per_tenant"] = {
+            t: _latency_digest([r for r in records
+                                if r.get("tenant", "") == t])
+            for t in tenants}
+    return out

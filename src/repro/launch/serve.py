@@ -25,6 +25,16 @@ Two serving modes:
     python -m repro.launch.serve --workload smoother --requests 64 \
         --n 512 --max-batch 64 --tol 1e-6 \
         --arrival bursty --policy deadline --rate 8 --deadline 2.0
+
+``--tenants`` makes the smoother workload multi-tenant (DESIGN.md §7):
+each tenant is a scenario from the registry (`repro.scenarios`) with an
+SLO class, one shared autobatching queue routes mixed-scenario traffic
+by the ``(model_id, method, n_pad, nx)`` bucket signature, and the
+summary breaks latency/deadline-hit down per tenant:
+
+    python -m repro.launch.serve --workload smoother \
+        --tenants coordinated_turn,bearings_only,pendulum:gold \
+        --arrival bursty --policy deadline --requests 48 --n 64
 """
 from __future__ import annotations
 
@@ -38,9 +48,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.launch.autobatch import (ComputeEstimator, FlushPolicy,
-                                    QueuedRequest, make_arrivals, next_pow2,
-                                    run_service, summarize_service)
+from repro.launch.autobatch import (SLO_CLASSES, ComputeEstimator,
+                                    FlushPolicy, QueuedRequest,
+                                    bucket_signature, make_arrivals,
+                                    pad_width, run_service,
+                                    summarize_service)
 
 
 # ---------------------------------------------------------------------------
@@ -165,33 +177,62 @@ def pad_requests(batch: List[np.ndarray], n_pad: int, b_pad: int,
 class SmootherServer:
     """Bucketed batched smoothing service over one state-space model.
 
-    Requests (``ys [n_i, ny]``) are grouped by ``(next_pow2(n_i), nx)``;
-    inside a bucket the time axis is padded to the bucket length with
-    zero measurements whose per-step R is inflated by ``R_PAD_SCALE``
-    (an exactly-uninformative update up to float error, so real-step
-    posteriors are unchanged), and the batch axis is padded by replication
-    to the launch width. Each (B, n) signature jit-caches one batched
-    iterated-smoother executable.
+    Requests (``ys [n_i, ny]``) are grouped by the shared
+    `autobatch.bucket_signature` key ``(model_id, method, next_pow2(n_i),
+    nx)``; inside a bucket the time axis is padded to the bucket length
+    with zero measurements whose per-step R is inflated by
+    ``R_PAD_SCALE`` (an exactly-uninformative update up to float error,
+    so real-step posteriors are unchanged), and the batch axis is padded
+    by replication to the launch width. Each (B, n) signature jit-caches
+    one batched iterated-smoother executable.
+
+    ``icfg`` pins the smoother configuration explicitly (a registry
+    tenant passes ``scenario.default_config(...)``, which carries the
+    scenario ``model_id``); when omitted, it is built from the legacy
+    `SmootherServeConfig` knobs with an empty model id.
     """
 
-    def __init__(self, model, cfg: SmootherServeConfig):
-        from repro.core import IteratedConfig, iterated_smoother_batched
+    def __init__(self, model, cfg: SmootherServeConfig, icfg=None,
+                 tenant: str = ""):
+        from repro.core import (IteratedConfig, iterated_smoother_batched,
+                                smoothed_log_likelihood)
 
         self.model = model
         self.cfg = cfg
-        self._icfg = IteratedConfig(
+        self.tenant = tenant
+        self._icfg = icfg if icfg is not None else IteratedConfig(
             method=cfg.method, n_iter=cfg.n_iter, tol=cfg.tol,
             parallel=cfg.parallel, lm_lambda=cfg.lm_lambda)
 
         def run(ys, r_stack):
             model_b = dataclasses.replace(self.model, R=r_stack)
-            return iterated_smoother_batched(model_b, ys, self._icfg,
-                                             return_info=True)
+            traj, info = iterated_smoother_batched(model_b, ys, self._icfg,
+                                                   return_info=True)
+            # Per-step fit scores; padded steps are masked host-side
+            # (their inflated-R terms belong to no request).
+            ll_steps = smoothed_log_likelihood(model_b, ys, traj,
+                                               self._icfg, per_step=True)
+            return traj, info, ll_steps
 
         self._run = jax.jit(run)
         # Per-bucket executable signatures seen so far (compile-count
         # bookkeeping; jax.jit caches by shape, this mirrors its keys).
         self.signatures_seen = set()
+
+    @property
+    def icfg(self):
+        return self._icfg
+
+    @property
+    def model_id(self) -> str:
+        return self._icfg.model_id
+
+    def queue_signature(self, n: int):
+        """The autobatch bucket key for a request of length ``n`` against
+        this server's model — the single shared key-construction path
+        (DESIGN.md §7)."""
+        return bucket_signature(self._icfg.model_id, self._icfg.method,
+                                n, self.model.nx)
 
     def _pad_bucket(self, batch: List[np.ndarray], n_pad: int, b_pad: int
                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -199,15 +240,20 @@ class SmootherServer:
 
     def smooth_batch(self, batch: List[np.ndarray], n_pad: int, b_pad: int):
         """Run one padded bucket launch; returns per-request trajectories
-        (list of ``[n_i + 1, nx]`` means) and the per-lane iteration info."""
+        (list of ``[n_i + 1, nx]`` means), the per-lane iteration info,
+        and per-request smoothed log-likelihood fit scores (real steps
+        only — padded-step terms are masked out)."""
         self.signatures_seen.add(
             self._icfg.cache_key(n_pad, b_pad, self.model.nx))
         ys, rs = self._pad_bucket(batch, n_pad, b_pad)
-        traj, info = self._run(ys, rs)
+        traj, info, ll_steps = self._run(ys, rs)
         jax.block_until_ready(traj.mean)
         means = [np.asarray(traj.mean[i, :len(y) + 1])
                  for i, y in enumerate(batch)]
-        return means, info
+        ll_steps = np.asarray(ll_steps)
+        logliks = [float(np.sum(ll_steps[i, :len(y)]))
+                   for i, y in enumerate(batch)]
+        return means, info, logliks
 
     def warmup(self, n_pads, b_pads, estimator: ComputeEstimator = None):
         """Pre-compile every (n_pad, b_pad) bucket signature and, when an
@@ -229,7 +275,7 @@ class SmootherServer:
                     self.smooth_batch(dummy, n_pad, b_pad)  # compile
                 if estimator is not None:
                     t0 = time.perf_counter()
-                    _, info = self.smooth_batch(dummy, n_pad, b_pad)
+                    _, info, _ = self.smooth_batch(dummy, n_pad, b_pad)
                     dt = time.perf_counter() - t0
                     # The zero-measurement dummy converges early under
                     # tol>0; scale to the full pass budget so the seed
@@ -239,36 +285,43 @@ class SmootherServer:
                     iters = float(np.mean(np.asarray(info.iterations)))
                     if self._icfg.tol > 0.0 and iters >= 1.0:
                         dt *= self._icfg.n_iter / iters
-                    estimator.observe((n_pad, self.model.nx), b_pad, dt)
+                    estimator.observe(self.queue_signature(n_pad), b_pad,
+                                      dt)
 
     def serve_requests(self, requests: List[np.ndarray], emit=print) -> dict:
         """Bucket, pad, and smooth a full request list; returns stats."""
-        buckets: Dict[int, List[int]] = defaultdict(list)
+        buckets: Dict[tuple, List[int]] = defaultdict(list)
         for idx, ys in enumerate(requests):
-            buckets[next_pow2(len(ys))].append(idx)
+            # The shared bucket key (autobatch.bucket_signature): the
+            # one-shot path and the streaming queue cannot drift.
+            buckets[self.queue_signature(len(ys))].append(idx)
 
         results: List[Optional[np.ndarray]] = [None] * len(requests)
+        logliks: List[Optional[float]] = [None] * len(requests)
         launches = 0
         iters_total = 0
         t0 = time.perf_counter()
-        for n_pad in sorted(buckets):
-            idxs = buckets[n_pad]
+        for sig in sorted(buckets):
+            n_pad = sig[2]
+            idxs = buckets[sig]
             for lo in range(0, len(idxs), self.cfg.max_batch):
                 chunk = idxs[lo:lo + self.cfg.max_batch]
                 # Same pow2 width quantization as the streaming path
-                # (FlushPolicy.pad_width): one bounded executable-cache
+                # (autobatch.pad_width): one bounded executable-cache
                 # contract whether requests arrive one-shot or queued.
-                b_pad = min(next_pow2(len(chunk)), self.cfg.max_batch)
-                means, info = self.smooth_batch(
+                b_pad = pad_width(len(chunk), self.cfg.max_batch)
+                means, info, lls = self.smooth_batch(
                     [requests[i] for i in chunk], n_pad, b_pad)
-                for i, m in zip(chunk, means):
+                for i, m, ll in zip(chunk, means, lls):
                     results[i] = m
+                    logliks[i] = ll
                 launches += 1
                 iters_total += int(np.sum(np.asarray(
                     info.iterations)[:len(chunk)]))
         dt = time.perf_counter() - t0
         stats = {
             "results": results,
+            "logliks": logliks,
             "requests": len(requests),
             "launches": launches,
             "mean_iterations": iters_total / max(len(requests), 1),
@@ -304,26 +357,30 @@ class SmootherServer:
         qreqs = [QueuedRequest(req_id=i, n=len(ys), nx=self.model.nx,
                                arrival=float(t),
                                deadline=float(t) + cfg.deadline_s,
-                               payload=ys)
+                               payload=ys, model_id=self.model_id,
+                               method=self._icfg.method,
+                               tenant=self.tenant)
                  for i, (ys, t) in enumerate(zip(requests, arrivals))]
         if cfg.warm:
-            n_pads = {r.signature[0] for r in qreqs}
+            n_pads = {r.signature[2] for r in qreqs}
             b_pads = {policy.pad_width(k)
                       for k in range(1, cfg.max_batch + 1)}
             self.warmup(n_pads, b_pads,
                         estimator if policy.kind == "deadline" else None)
 
         results: List[Optional[np.ndarray]] = [None] * len(requests)
+        logliks: List[Optional[float]] = [None] * len(requests)
         iters_total = 0
 
         def execute(fl):
             batch = [r.payload for r in fl.requests]
             t0 = time.perf_counter()
-            means, info = self.smooth_batch(batch, fl.signature[0],
-                                            fl.b_pad)
+            means, info, lls = self.smooth_batch(batch, fl.signature[2],
+                                                 fl.b_pad)
             dt = time.perf_counter() - t0
-            for r, m in zip(fl.requests, means):
+            for r, m, ll in zip(fl.requests, means, lls):
                 results[r.req_id] = m
+                logliks[r.req_id] = ll
             nonlocal iters_total
             iters_total += int(np.sum(np.asarray(
                 info.iterations)[:len(batch)]))
@@ -333,6 +390,7 @@ class SmootherServer:
         stats = summarize_service(service)
         stats.update({
             "results": results,
+            "logliks": logliks,
             "mean_iterations": iters_total / max(len(requests), 1),
             "compiles": len(self.signatures_seen),
             "records": service["records"],
@@ -347,15 +405,262 @@ class SmootherServer:
         return stats
 
 
+# ---------------------------------------------------------------------------
+# Multi-tenant serving (scenario registry tenants; DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant of the multi-tenant smoother service: a registry
+    scenario plus its SLO class. ``deadline_s=None`` takes the class
+    default (`autobatch.SLO_CLASSES`); ``weight`` is the tenant's share
+    of the generated request mix."""
+
+    tenant: str
+    scenario: str
+    slo: str = "standard"
+    weight: float = 1.0
+    deadline_s: Optional[float] = None
+
+    def __post_init__(self):
+        if self.slo not in SLO_CLASSES:
+            raise ValueError(f"unknown SLO class {self.slo!r}; "
+                             f"available: {sorted(SLO_CLASSES)}")
+
+    @classmethod
+    def parse(cls, spec: str) -> "TenantSpec":
+        """CLI syntax: ``scenario[:slo[:weight]]`` (e.g.
+        ``pendulum:gold`` or ``lorenz96:batch:0.5``); empty fields take
+        the defaults."""
+        parts = spec.split(":")
+        name = parts[0]
+        slo = parts[1] if len(parts) > 1 and parts[1] else "standard"
+        try:
+            weight = (float(parts[2])
+                      if len(parts) > 2 and parts[2] else 1.0)
+        except ValueError as e:
+            raise ValueError(
+                f"bad tenant spec {spec!r}: weight must be a float "
+                f"(syntax: scenario[:slo[:weight]])") from e
+        return cls(tenant=name, scenario=name, slo=slo, weight=weight)
+
+    @property
+    def slo_class(self):
+        return SLO_CLASSES[self.slo]
+
+    @property
+    def budget_s(self) -> float:
+        return (self.deadline_s if self.deadline_s is not None
+                else self.slo_class.deadline_s)
+
+
+class MultiTenantServer:
+    """One autobatching queue over several scenario models.
+
+    Each tenant owns a `SmootherServer` built from its registry
+    scenario's default smoother configuration (linearization method,
+    sigma scheme, damping, ``model_id``); the queue's bucket signature
+    ``(model_id, method, n_pad, nx)`` routes every flush back to the
+    owning tenant, so batches never mix models (the executable is
+    per-model anyway — mixing would be mathematically wrong, not just
+    slow). Deadlines and launch priority come from the tenant's SLO
+    class; `summarize_service` reports the per-tenant latency and
+    deadline-hit breakdown.
+    """
+
+    def __init__(self, tenants: List[TenantSpec], cfg: SmootherServeConfig):
+        from repro.scenarios import get_scenario
+
+        if not tenants:
+            raise ValueError("need at least one tenant")
+        dtype = jnp.float64 if cfg.f64 else jnp.float32
+        self.cfg = cfg
+        self.specs: Dict[str, TenantSpec] = {}
+        self.servers: Dict[str, SmootherServer] = {}
+        self._by_model: Dict[Tuple[str, str], SmootherServer] = {}
+        for spec in tenants:
+            if spec.tenant in self.specs:
+                raise ValueError(f"duplicate tenant {spec.tenant!r}")
+            sc = get_scenario(spec.scenario)
+            icfg = sc.default_config(n_iter=cfg.n_iter, tol=cfg.tol,
+                                     parallel=cfg.parallel)
+            server = SmootherServer(sc.make_model(dtype), cfg, icfg=icfg,
+                                    tenant=spec.tenant)
+            self.specs[spec.tenant] = spec
+            self.servers[spec.tenant] = server
+            route = (server.model_id, icfg.method)
+            if route in self._by_model:
+                raise ValueError(
+                    f"tenants {spec.tenant!r} and "
+                    f"{self._by_model[route].tenant!r} resolve to the same "
+                    f"(model_id, method) route — deduplicate them upstream")
+            self._by_model[route] = server
+
+    def scenario_of(self, tenant: str):
+        return self.specs[tenant]
+
+    def serve_stream(self, requests: List[Tuple[str, np.ndarray]],
+                     arrivals: np.ndarray, emit=print,
+                     policy: Optional[FlushPolicy] = None) -> dict:
+        """Serve a timestamped *mixed* stream of ``(tenant, ys)`` pairs.
+
+        Per-tenant warmup pre-compiles each tenant's bucket signatures
+        and seeds the shared compute estimator, so streaming latency
+        never pays compile time regardless of which tenant a bucket
+        belongs to.
+        """
+        cfg = self.cfg
+        if policy is None:
+            policy = FlushPolicy(kind=cfg.policy, max_batch=cfg.max_batch,
+                                 max_wait=cfg.max_wait_s, slack=cfg.slack)
+        estimator = ComputeEstimator(policy.ema_alpha,
+                                     policy.default_compute)
+        qreqs = []
+        for i, ((tenant, ys), t) in enumerate(zip(requests, arrivals)):
+            spec = self.specs[tenant]
+            server = self.servers[tenant]
+            qreqs.append(QueuedRequest(
+                req_id=i, n=len(ys), nx=server.model.nx, arrival=float(t),
+                deadline=float(t) + spec.budget_s, payload=ys,
+                model_id=server.model_id, method=server.icfg.method,
+                tenant=tenant, priority=spec.slo_class.priority))
+        if cfg.warm:
+            b_pads = {policy.pad_width(k)
+                      for k in range(1, cfg.max_batch + 1)}
+            for tenant, server in self.servers.items():
+                n_pads = {r.signature[2] for r in qreqs
+                          if r.tenant == tenant}
+                if n_pads:
+                    server.warmup(
+                        n_pads, b_pads,
+                        estimator if policy.kind == "deadline" else None)
+
+        results: List[Optional[np.ndarray]] = [None] * len(requests)
+        logliks: List[Optional[float]] = [None] * len(requests)
+        iters_total = 0
+
+        def execute(fl):
+            model_id, method, n_pad, _ = fl.signature
+            server = self._by_model[(model_id, method)]
+            batch = [r.payload for r in fl.requests]
+            t0 = time.perf_counter()
+            means, info, lls = server.smooth_batch(batch, n_pad, fl.b_pad)
+            dt = time.perf_counter() - t0
+            for r, m, ll in zip(fl.requests, means, lls):
+                results[r.req_id] = m
+                logliks[r.req_id] = ll
+            nonlocal iters_total
+            iters_total += int(np.sum(np.asarray(
+                info.iterations)[:len(batch)]))
+            return dt
+
+        service = run_service(qreqs, execute, policy, estimator)
+        stats = summarize_service(service)
+        stats.update({
+            "results": results,
+            "logliks": logliks,
+            "mean_iterations": iters_total / max(len(requests), 1),
+            "compiles": sum(len(s.signatures_seen)
+                            for s in self.servers.values()),
+            "records": service["records"],
+            "launch_log": service["launches"],
+        })
+        emit(f"[serve/smoother/mt/{policy.kind}] {stats['requests']} "
+             f"requests, {len(self.servers)} tenants, "
+             f"{stats['launches']} launches "
+             f"(p95 {stats['latency_p95_s'] * 1e3:.1f}ms, "
+             f"deadline hit {stats['deadline_hit_rate']:.0%}, "
+             f"occupancy {stats['occupancy']:.2f})")
+        for tenant, digest in stats.get("per_tenant", {}).items():
+            spec = self.specs[tenant]
+            emit(f"  [tenant {tenant} ({spec.slo})] "
+                 f"{digest['requests']} reqs, "
+                 f"p50 {digest['latency_p50_s'] * 1e3:.1f}ms, "
+                 f"p95 {digest['latency_p95_s'] * 1e3:.1f}ms, "
+                 f"deadline hit {digest['deadline_hit_rate']:.0%}")
+        return stats
+
+
+def make_tenant_fleet(server: MultiTenantServer, n_requests: int, n: int,
+                      vary_lengths: bool = True, seed: int = 0):
+    """Generate a mixed-scenario request fleet for a multi-tenant server:
+    per request, draw a tenant by ``TenantSpec.weight`` and a length
+    from the same varied-length mix as the single-tenant driver.
+    Returns ``(requests [(tenant, ys)], truths [xs])`` — the single
+    generation path shared by `serve_smoother_multitenant` and
+    `benchmarks/serve_bench.run_multitenant`."""
+    from repro.scenarios import get_scenario
+
+    names = list(server.specs)
+    weights = np.asarray([server.specs[t].weight for t in names])
+    weights = weights / weights.sum()
+    lengths = ([max(n // 2, 2), max((3 * n) // 4, 2), n]
+               if vary_lengths else [n])
+    rng = np.random.default_rng(seed)
+    requests, truths = [], []
+    for i in range(n_requests):
+        tenant = names[int(rng.choice(len(names), p=weights))]
+        sc = get_scenario(server.specs[tenant].scenario)
+        model = server.servers[tenant].model
+        n_i = int(lengths[int(rng.integers(len(lengths)))])
+        xs, ys = sc.simulate(model, n_i, jax.random.PRNGKey(seed + i))
+        requests.append((tenant, np.asarray(ys)))
+        truths.append(np.asarray(xs))
+    return requests, truths
+
+
+def serve_smoother_multitenant(cfg: SmootherServeConfig,
+                               tenants: List[TenantSpec],
+                               emit=print) -> dict:
+    """Generate a mixed-scenario request fleet and serve it through one
+    multi-tenant queue. Tenants are drawn by ``weight`` per request;
+    lengths follow the same varied-length mix as the single-tenant
+    driver. ``--arrival none`` degenerates to an all-at-t=0 stream."""
+    if cfg.f64:
+        jax.config.update("jax_enable_x64", True)
+    server = MultiTenantServer(tenants, cfg)
+    requests, truths = make_tenant_fleet(server, cfg.requests, cfg.n,
+                                         cfg.vary_lengths, cfg.seed)
+
+    if cfg.arrival == "none":
+        arrivals = np.zeros(cfg.requests)
+    else:
+        arrivals = make_arrivals(cfg.arrival, cfg.requests, cfg.rate,
+                                 cfg.burst_size, seed=cfg.seed)
+    stats = server.serve_stream(requests, arrivals, emit=emit)
+
+    # Statistical sanity per tenant: full-state RMSE against the
+    # simulated truth (position-only RMSE would be meaningless for the
+    # scalar scenarios) and the mean smoothed log-likelihood fit score.
+    ll_by: Dict[str, List[float]] = defaultdict(list)
+    rmse_by: Dict[str, List[float]] = defaultdict(list)
+    for (tenant, _), ll, mean, xs in zip(requests, stats["logliks"],
+                                         stats["results"], truths):
+        ll_by[tenant].append(ll)
+        rmse_by[tenant].append(
+            float(np.sqrt(np.mean((mean[1:] - xs[1:]) ** 2))))
+    stats["mean_loglik_per_tenant"] = {
+        t: float(np.mean(v)) for t, v in sorted(ll_by.items())}
+    stats["mean_rmse_per_tenant"] = {
+        t: float(np.mean(v)) for t, v in sorted(rmse_by.items())}
+    for t in stats["mean_loglik_per_tenant"]:
+        emit(f"  [tenant {t}] mean state RMSE "
+             f"{stats['mean_rmse_per_tenant'][t]:.4f}, "
+             f"mean smoothed loglik "
+             f"{stats['mean_loglik_per_tenant'][t]:.1f}")
+    return stats
+
+
 def serve_smoother(cfg: SmootherServeConfig, emit=print) -> dict:
     """Generate a synthetic coordinated-turn request fleet and serve it."""
-    from repro.data import (CoordinatedTurnConfig,
-                            make_coordinated_turn_model, simulate_trajectory)
+    from repro.core import IteratedConfig
+    from repro.scenarios import get_scenario
 
     dtype = jnp.float64 if cfg.f64 else jnp.float32
     if cfg.f64:
         jax.config.update("jax_enable_x64", True)
-    model = make_coordinated_turn_model(CoordinatedTurnConfig(), dtype=dtype)
+    sc = get_scenario("coordinated_turn")
+    model = sc.make_model(dtype)
 
     # A small set of distinct lengths keeps request generation cheap while
     # still exercising the (n, nx) bucketing + padding path.
@@ -365,12 +670,17 @@ def serve_smoother(cfg: SmootherServeConfig, emit=print) -> dict:
     requests, truths = [], []
     for i in range(cfg.requests):
         n_i = int(lengths[int(rng.integers(len(lengths)))])
-        xs, ys = simulate_trajectory(model, n_i,
-                                     jax.random.PRNGKey(cfg.seed + i))
+        xs, ys = sc.simulate(model, n_i, jax.random.PRNGKey(cfg.seed + i))
         requests.append(np.asarray(ys))
         truths.append(np.asarray(xs))
 
-    server = SmootherServer(model, cfg)
+    # Legacy single-tenant smoother knobs from SmootherServeConfig, but
+    # with the registry model_id in the cache key (shared bucketing
+    # contract with the multi-tenant path).
+    icfg = IteratedConfig(method=cfg.method, n_iter=cfg.n_iter, tol=cfg.tol,
+                          parallel=cfg.parallel, lm_lambda=cfg.lm_lambda,
+                          model_id=sc.model_id)
+    server = SmootherServer(model, cfg, icfg=icfg, tenant=sc.name)
     if cfg.arrival == "none":
         stats = server.serve_requests(requests, emit=emit)
     else:
@@ -420,15 +730,25 @@ def main(argv=None):
                    help="smoother: per-request completion budget (s)")
     p.add_argument("--max-wait", type=float, default=0.25,
                    help="smoother: queue-wait cap (s)")
+    p.add_argument("--tenants", type=str, default=None,
+                   help="smoother: comma-separated scenario[:slo[:weight]]"
+                        " list (e.g. coordinated_turn,pendulum:gold) — "
+                        "serves a mixed multi-tenant stream")
     args = p.parse_args(argv)
     if args.workload == "smoother":
-        serve_smoother(SmootherServeConfig(
+        cfg = SmootherServeConfig(
             requests=args.requests, n=args.n, max_batch=args.max_batch,
             method=args.method, n_iter=args.iters, tol=args.tol,
             parallel=not args.sequential, f64=not args.f32,
             arrival=args.arrival, policy=args.policy, rate=args.rate,
             burst_size=args.burst_size, deadline_s=args.deadline,
-            max_wait_s=args.max_wait))
+            max_wait_s=args.max_wait)
+        if args.tenants:
+            serve_smoother_multitenant(
+                cfg, [TenantSpec.parse(s)
+                      for s in args.tenants.split(",") if s])
+        else:
+            serve_smoother(cfg)
     else:
         if args.arch is None:
             p.error("--arch is required for the decode workload")

@@ -1,0 +1,131 @@
+"""Scenario registry: named nonlinear SSM setups behind one contract.
+
+A :class:`Scenario` bundles everything the serving stack needs to treat a
+model family as a first-class tenant (DESIGN.md §7):
+
+  * a model factory (``build(dtype) -> StateSpaceModel``) — dynamics and
+    observation callables plus noise covariances and the prior;
+  * a ground-truth simulator (`simulate_trajectory`, shared across all
+    additive-Gaussian scenarios);
+  * the default linearization (``ekf`` Taylor vs ``slr`` sigma-point) and
+    its production knobs (sigma scheme, Levenberg-Marquardt damping);
+  * a stable ``model_id`` — a content hash of the scenario name and its
+    numeric parameters.  The id is baked into
+    :meth:`Scenario.default_config` (`IteratedConfig.model_id`), so it
+    flows into `IteratedConfig.cache_key` and the autobatch bucket
+    signature ``(model_id, method, n_pad, nx)``: two tenants share an
+    executable bucket iff they are literally the same model, and a
+    parameter tweak re-keys the jit cache instead of silently reusing a
+    stale executable.
+
+Registration is import-time: each scenario module calls
+:func:`register` at module scope, and ``repro/scenarios/__init__.py``
+imports the full catalogue.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.iterated import IteratedConfig
+from repro.core.types import StateSpaceModel
+
+
+def simulate_trajectory(model: StateSpaceModel, n: int, key: jax.Array
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sample ``x_{0:n}`` and ``y_{1:n}`` from any additive-Gaussian
+    scenario model. Returns ``(xs [n+1, nx], ys [n, ny])``."""
+    kx0, kq, kr = jax.random.split(key, 3)
+    dtype = model.m0.dtype
+    cholQ = jnp.linalg.cholesky(model.Q)
+    cholR = jnp.linalg.cholesky(model.R)
+    cholP0 = jnp.linalg.cholesky(model.P0)
+    x0 = model.m0 + cholP0 @ jax.random.normal(kx0, (model.nx,), dtype)
+    qs = jax.random.normal(kq, (n, model.nx), dtype) @ cholQ.T
+    rs = jax.random.normal(kr, (n, model.ny), dtype) @ cholR.T
+
+    def step(x, noise):
+        q, r = noise
+        x_next = model.f(x) + q
+        y = model.h(x_next) + r
+        return x_next, (x_next, y)
+
+    _, (xs, ys) = jax.lax.scan(step, x0, (qs, rs))
+    return jnp.concatenate([x0[None], xs], axis=0), ys
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One registered nonlinear state-space scenario.
+
+    ``params`` is the flat ``(name, value)`` tuple of every numeric knob
+    that shapes the model — it is the hashed content of ``model_id``, so
+    anything that changes the executable's math must appear in it.
+    """
+
+    name: str
+    build: Callable[..., StateSpaceModel]   # build(dtype) -> model
+    nx: int
+    ny: int
+    default_method: str = "ekf"             # "ekf" | "slr"
+    sigma_scheme: str = "cubature"          # for method="slr"
+    lm_lambda: float = 0.0                  # production damping default
+    description: str = ""
+    params: Tuple[Tuple[str, float], ...] = ()
+
+    @property
+    def model_id(self) -> str:
+        """Stable content signature: ``<name>:<sha1[:8] of name+params>``.
+
+        Human-prefixed for log/bench readability; the hash suffix is what
+        guarantees a parameter change re-keys every cache built on it.
+        """
+        blob = self.name + "".join(
+            f";{k}={v!r}" for k, v in self.params)
+        digest = hashlib.sha1(blob.encode()).hexdigest()[:8]
+        return f"{self.name}:{digest}"
+
+    def make_model(self, dtype=jnp.float64) -> StateSpaceModel:
+        return self.build(dtype)
+
+    def simulate(self, model: StateSpaceModel, n: int, key: jax.Array
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return simulate_trajectory(model, n, key)
+
+    def default_config(self, **overrides) -> IteratedConfig:
+        """The scenario's production `IteratedConfig`: default
+        linearization, damping, and the ``model_id`` cache-key component.
+        Keyword overrides replace any field (e.g. ``n_iter``, ``tol``)."""
+        kw = dict(method=self.default_method,
+                  sigma_scheme=self.sigma_scheme,
+                  lm_lambda=self.lm_lambda,
+                  model_id=self.model_id)
+        kw.update(overrides)
+        return IteratedConfig(**kw)
+
+
+_REGISTRY: Dict[str, Scenario] = {}
+
+
+def register(scenario: Scenario) -> Scenario:
+    """Add a scenario to the registry (import-time; name must be new)."""
+    if scenario.name in _REGISTRY:
+        raise ValueError(f"scenario {scenario.name!r} already registered")
+    _REGISTRY[scenario.name] = scenario
+    return scenario
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return _REGISTRY[name]
+    except KeyError as e:
+        raise ValueError(f"unknown scenario {name!r}; "
+                         f"available: {list_scenarios()}") from e
+
+
+def list_scenarios() -> List[str]:
+    return sorted(_REGISTRY)

@@ -1,0 +1,115 @@
+"""Coordinated-turn model with bearings-only measurements (paper §5).
+
+The paper evaluates on the coordinated-turn / bearings-only model of
+Bar-Shalom & Li (ref [21]), as used in Särkkä & Svensson 2020 (ref [15]):
+state ``x = [p_x, p_y, v_x, v_y, omega]`` with turn-rate dynamics, observed
+through bearings from two fixed sensors.
+
+Migrated from ``repro/data/tracking.py`` into the scenario registry
+(``repro.data`` keeps thin re-exports for backward compatibility).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.core.types import StateSpaceModel
+
+from .base import Scenario, register
+
+
+@dataclasses.dataclass(frozen=True)
+class CoordinatedTurnConfig:
+    dt: float = 0.01
+    q1: float = 0.1          # position/velocity process noise PSD
+    q2: float = 0.1          # turn-rate process noise PSD
+    r_std: float = 0.05      # bearing noise std (radians)
+    # Sensors flank the trajectory; keeping them off the flight path avoids
+    # the bearings singularity (range -> 0) that destabilizes plain
+    # Gauss-Newton (cf. paper ref [15] on the need for damped variants).
+    sensor1: Tuple[float, float] = (-1.5, 0.5)
+    sensor2: Tuple[float, float] = (1.0, -1.0)
+    m0: Tuple[float, ...] = (0.1, 0.2, 1.0, 0.0, 0.0)
+    p0_diag: Tuple[float, ...] = (0.1, 0.1, 0.1, 0.1, 1.0)
+
+
+def _turn_dynamics(dt: float):
+    """Exact coordinated-turn transition, smooth at omega -> 0.
+
+    Uses guarded denominators so the Taylor branch keeps `jax.jacfwd`
+    NaN-free (both `where` branches are evaluated under AD).
+    """
+
+    def f(x):
+        px, py, vx, vy, w = x
+        wd = w * dt
+        small = jnp.abs(wd) < 1e-6
+        safe_wd = jnp.where(small, 1.0, wd)
+        # sin(w dt)/w and (1 - cos(w dt))/w with series fallbacks.
+        swd = jnp.where(small, dt * (1.0 - wd * wd / 6.0),
+                        jnp.sin(safe_wd) / safe_wd * dt)
+        cwd = jnp.where(small, dt * (wd / 2.0 - wd ** 3 / 24.0),
+                        (1.0 - jnp.cos(safe_wd)) / safe_wd * dt)
+        cos_wd = jnp.cos(wd)
+        sin_wd = jnp.sin(wd)
+        return jnp.stack([
+            px + swd * vx - cwd * vy,
+            py + cwd * vx + swd * vy,
+            cos_wd * vx - sin_wd * vy,
+            sin_wd * vx + cos_wd * vy,
+            w,
+        ])
+
+    return f
+
+
+def bearings_observation(sensor1, sensor2, dtype):
+    """Two-sensor bearings map (shared with the `bearings_only` scenario)."""
+    s1 = jnp.asarray(sensor1, dtype=dtype)
+    s2 = jnp.asarray(sensor2, dtype=dtype)
+
+    def h(x):
+        return jnp.stack([
+            jnp.arctan2(x[1] - s1[1], x[0] - s1[0]),
+            jnp.arctan2(x[1] - s2[1], x[0] - s2[0]),
+        ])
+
+    return h
+
+
+def make_coordinated_turn_model(cfg: CoordinatedTurnConfig = CoordinatedTurnConfig(),
+                                dtype=jnp.float64) -> StateSpaceModel:
+    dt, q1, q2 = cfg.dt, cfg.q1, cfg.q2
+    Q = jnp.array([
+        [q1 * dt ** 3 / 3, 0, q1 * dt ** 2 / 2, 0, 0],
+        [0, q1 * dt ** 3 / 3, 0, q1 * dt ** 2 / 2, 0],
+        [q1 * dt ** 2 / 2, 0, q1 * dt, 0, 0],
+        [0, q1 * dt ** 2 / 2, 0, q1 * dt, 0],
+        [0, 0, 0, 0, q2 * dt],
+    ], dtype=dtype)
+    R = (cfg.r_std ** 2) * jnp.eye(2, dtype=dtype)
+    m0 = jnp.asarray(cfg.m0, dtype=dtype)
+    P0 = jnp.diag(jnp.asarray(cfg.p0_diag, dtype=dtype))
+    return StateSpaceModel(f=_turn_dynamics(dt),
+                           h=bearings_observation(cfg.sensor1, cfg.sensor2,
+                                                  dtype),
+                           Q=Q, R=R, m0=m0, P0=P0)
+
+
+_CFG = CoordinatedTurnConfig()
+
+register(Scenario(
+    name="coordinated_turn",
+    build=lambda dtype=jnp.float64: make_coordinated_turn_model(_CFG, dtype),
+    nx=5, ny=2,
+    default_method="ekf",
+    lm_lambda=1.0,   # undamped GN diverges beyond ~300 steps (DESIGN.md §11)
+    description="Paper §5: coordinated-turn dynamics, two-sensor "
+                "bearings-only observations.",
+    params=(("dt", _CFG.dt), ("q1", _CFG.q1), ("q2", _CFG.q2),
+            ("r_std", _CFG.r_std),
+            ("sensor1", _CFG.sensor1), ("sensor2", _CFG.sensor2),
+            ("m0", _CFG.m0), ("p0_diag", _CFG.p0_diag)),
+))

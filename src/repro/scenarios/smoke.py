@@ -1,0 +1,75 @@
+"""Scenario smoke matrix: every registered scenario x both linearizations.
+
+The CI gate for the model zoo (`scripts/ci.sh`): each scenario must
+simulate, smooth with *both* linearization methods (not just its
+default) at a tiny horizon, produce finite estimates, keep
+parallel == sequential parity, and not degrade the fit score
+(`smoothed_log_likelihood`) relative to the un-iterated prior
+trajectory.
+
+    PYTHONPATH=src python -m repro.scenarios.smoke [--n 24] [--iters 3]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np       # noqa: E402
+
+from repro.core import (initial_trajectory, iterated_smoother,  # noqa: E402
+                        smoothed_log_likelihood)
+from repro.scenarios import get_scenario, list_scenarios  # noqa: E402
+
+PARITY_TOL = 1e-6   # max-abs parallel-vs-sequential mean gap
+
+
+def run_matrix(n: int = 24, n_iter: int = 3, methods=("ekf", "slr"),
+               emit=print) -> list:
+    """Run the matrix; returns one result dict per (scenario, method)."""
+    results = []
+    for name in list_scenarios():
+        sc = get_scenario(name)
+        model = sc.make_model(jnp.float64)
+        xs, ys = sc.simulate(model, n, jax.random.PRNGKey(0))
+        for method in methods:
+            cfg = sc.default_config(method=method, n_iter=n_iter)
+            sm_par = iterated_smoother(model, ys, cfg)
+            sm_seq = iterated_smoother(
+                model, ys, dataclasses.replace(cfg, parallel=False))
+            gap = float(jnp.max(jnp.abs(sm_par.mean - sm_seq.mean)))
+            ll = float(smoothed_log_likelihood(model, ys, sm_par, cfg))
+            ll0 = float(smoothed_log_likelihood(
+                model, ys, initial_trajectory(model, n), cfg))
+            ok = (np.all(np.isfinite(np.asarray(sm_par.mean)))
+                  and gap < PARITY_TOL and np.isfinite(ll) and ll >= ll0)
+            results.append({
+                "scenario": name, "method": method, "model_id": sc.model_id,
+                "nx": sc.nx, "ny": sc.ny, "par_seq_gap": gap,
+                "loglik": ll, "loglik_prior": ll0, "ok": bool(ok),
+            })
+            emit(f"[smoke] {name:<24} {method:<4} nx={sc.nx} "
+                 f"gap={gap:.2e} loglik={ll:9.2f} "
+                 f"(prior {ll0:9.2f}) {'OK' if ok else 'FAIL'}")
+    return results
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--n", type=int, default=24)
+    p.add_argument("--iters", type=int, default=3)
+    args = p.parse_args(argv)
+    results = run_matrix(n=args.n, n_iter=args.iters)
+    failed = [r for r in results if not r["ok"]]
+    print(f"[smoke] {len(results) - len(failed)}/{len(results)} "
+          f"scenario x method cells green")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,32 +2,46 @@
 
 The queue is clock-agnostic — every entry point takes ``now`` — so each
 trigger (fill, deadline, max-wait, drain) is pinned deterministically,
-plus the no-starvation guarantee for rare ``(n_pad, nx)`` signatures and
-the discrete-event driver's bookkeeping with a stub executor.
+plus the no-starvation guarantee for rare signatures, the multi-tenant
+``(model_id, method, n_pad, nx)`` bucket isolation with SLO-aware launch
+ordering, and the discrete-event driver's bookkeeping with a stub
+executor.
 """
 import math
 
 import pytest
 
-from repro.launch.autobatch import (AutobatchQueue, ComputeEstimator,
-                                    FlushPolicy, QueuedRequest,
+from repro.launch.autobatch import (SLO_CLASSES, AutobatchQueue,
+                                    ComputeEstimator, FlushPolicy,
+                                    QueuedRequest,
                                     FLUSH_DEADLINE, FLUSH_DRAIN, FLUSH_FULL,
-                                    FLUSH_MAX_WAIT, make_arrivals,
-                                    next_pow2, run_service,
-                                    summarize_service)
+                                    FLUSH_MAX_WAIT, bucket_signature,
+                                    make_arrivals, next_pow2, pad_width,
+                                    run_service, summarize_service)
 
 
-def req(i, n=10, nx=5, arrival=0.0, deadline=math.inf):
+def req(i, n=10, nx=5, arrival=0.0, deadline=math.inf, model_id="",
+        method="ekf", tenant="", priority=1):
     return QueuedRequest(req_id=i, n=n, nx=nx, arrival=arrival,
-                        deadline=deadline)
+                         deadline=deadline, model_id=model_id,
+                         method=method, tenant=tenant, priority=priority)
+
+
+def sig(n_pad, nx=5, model_id="", method="ekf"):
+    return (model_id, method, n_pad, nx)
 
 
 def test_signature_and_pad_width():
-    assert req(0, n=10).signature == (16, 5)
-    assert req(0, n=16).signature == (16, 5)
+    assert req(0, n=10).signature == sig(16)
+    assert req(0, n=16).signature == sig(16)
+    assert req(0, n=16, model_id="m:1", method="slr").signature == \
+        ("m:1", "slr", 16, 5)
+    assert bucket_signature("m:1", "ekf", 10, 5) == ("m:1", "ekf", 16, 5)
     pol = FlushPolicy(max_batch=8)
     assert [pol.pad_width(k) for k in (1, 2, 3, 5, 8, 9)] == \
         [1, 2, 4, 8, 8, 8]
+    # FlushPolicy delegates to the single shared quantization.
+    assert all(pol.pad_width(k) == pad_width(k, 8) for k in range(1, 12))
     assert next_pow2(1) == 1 and next_pow2(9) == 16
 
 
@@ -61,7 +75,7 @@ def test_deadline_triggered_flush():
     pol = FlushPolicy(kind="deadline", max_batch=8, max_wait=100.0,
                       slack=1.0)
     est = ComputeEstimator(alpha=1.0)
-    est.observe((16, 5), 1, 0.3)
+    est.observe(sig(16), 1, 0.3)
     q = AutobatchQueue(pol, est)
     q.submit(req(0, arrival=0.0, deadline=1.0), now=0.0)
     # Flush must happen at deadline - slack * est = 0.7, not before.
@@ -77,7 +91,7 @@ def test_deadline_flush_honors_tightest_not_oldest():
     pol = FlushPolicy(kind="deadline", max_batch=8, max_wait=100.0,
                       slack=1.0)
     est = ComputeEstimator(alpha=1.0)
-    est.observe((16, 5), 2, 0.1)
+    est.observe(sig(16), 2, 0.1)
     q = AutobatchQueue(pol, est)
     q.submit(req(0, arrival=0.0, deadline=10.0), now=0.0)   # FIFO head
     q.submit(req(1, arrival=0.1, deadline=0.5), now=0.1)    # tighter
@@ -106,12 +120,12 @@ def test_no_starvation_of_rare_signature():
     for i in range(8):                                 # popular: (16, 5)
         q.submit(req(i, n=16, arrival=0.01), now=0.01)
     flushes = q.pop_ready(now=0.05)
-    assert all(f.signature == (16, 5) and f.reason == FLUSH_FULL
+    assert all(f.signature == sig(16) and f.reason == FLUSH_FULL
                for f in flushes)
     assert q.next_due() <= 0.2
     late = q.pop_ready(now=0.2)
     assert len(late) == 1
-    assert late[0].signature == (128, 5)
+    assert late[0].signature == sig(128)
     assert late[0].reason == FLUSH_MAX_WAIT
     assert late[0].requests[0].req_id == 99
 
@@ -134,13 +148,17 @@ def test_static_policy_only_flushes_on_fill_or_drain():
 
 def test_estimator_scales_unseen_widths():
     est = ComputeEstimator(alpha=0.5, default=0.123)
-    assert est.estimate((16, 5), 4) == pytest.approx(0.123)  # unseen sig
-    est.observe((16, 5), 4, 0.2)
-    assert est.estimate((16, 5), 4) == pytest.approx(0.2)
-    assert est.estimate((16, 5), 8) == pytest.approx(0.4)    # linear in B
-    assert est.estimate((16, 5), 2) == pytest.approx(0.1)
-    est.observe((16, 5), 4, 0.4)                             # EMA update
-    assert est.estimate((16, 5), 4) == pytest.approx(0.3)
+    assert est.estimate(sig(16), 4) == pytest.approx(0.123)  # unseen sig
+    est.observe(sig(16), 4, 0.2)
+    assert est.estimate(sig(16), 4) == pytest.approx(0.2)
+    assert est.estimate(sig(16), 8) == pytest.approx(0.4)    # linear in B
+    assert est.estimate(sig(16), 2) == pytest.approx(0.1)
+    est.observe(sig(16), 4, 0.4)                             # EMA update
+    assert est.estimate(sig(16), 4) == pytest.approx(0.3)
+    # Same shape, different tenant model: a fresh signature (falls back
+    # to the default, never the other tenant's EMA).
+    assert est.estimate(sig(16, model_id="m:2"), 4) == \
+        pytest.approx(0.123)
 
 
 def test_run_service_latency_accounting():
@@ -183,6 +201,75 @@ def test_static_policy_drains_at_end_of_stream():
     service = run_service(reqs, execute=lambda fl: 0.01, policy=pol)
     assert len(service["records"]) == 3
     assert [l["reason"] for l in service["launches"]] == [FLUSH_DRAIN]
+
+
+def test_no_cross_tenant_batch_mixing():
+    """Same (n_pad, nx) shape, different model/method: separate buckets,
+    never one launch."""
+    q = AutobatchQueue(FlushPolicy(kind="static", max_batch=4))
+    for i in range(3):
+        q.submit(req(i, n=16, model_id="m:a", tenant="a"), now=0.0)
+        q.submit(req(10 + i, n=16, model_id="m:b", tenant="b"), now=0.0)
+    q.submit(req(20, n=16, model_id="m:a", method="slr", tenant="a2"),
+             now=0.0)
+    flushes = q.pop_ready(now=0.0, drain=True)
+    assert len(flushes) == 3
+    for fl in flushes:
+        models = {(r.model_id, r.method) for r in fl.requests}
+        assert len(models) == 1
+        assert (fl.signature[0], fl.signature[1]) == next(iter(models))
+
+
+def test_slo_priority_flush_ordering():
+    """At one instant: timer-triggered buckets launch before fill-only
+    ones, and gold (priority 0) beats standard (priority 1) within the
+    timer class — regardless of signature sort order."""
+    pol = FlushPolicy(kind="deadline", max_batch=2, max_wait=10.0,
+                      slack=1.0)
+    q = AutobatchQueue(pol)
+    gold = SLO_CLASSES["gold"].priority
+    std = SLO_CLASSES["standard"].priority
+    # Bucket A (model a, standard): fills to max_batch -> fill-triggered.
+    q.submit(req(0, n=16, model_id="a", priority=std), now=0.0)
+    q.submit(req(1, n=16, model_id="a", priority=std), now=0.0)
+    # Buckets B (model b, standard) and C (model c, gold): deadlines due
+    # at t=1 (no compute estimate -> flush at the deadline).
+    q.submit(req(2, n=16, model_id="b", deadline=1.0, priority=std),
+             now=0.0)
+    q.submit(req(3, n=16, model_id="c", deadline=1.0, priority=gold),
+             now=0.0)
+    flushes = q.pop_ready(now=1.0)
+    assert [f.signature[0] for f in flushes] == ["c", "b", "a"]
+    assert [f.reason for f in flushes] == \
+        [FLUSH_DEADLINE, FLUSH_DEADLINE, FLUSH_FULL]
+    assert flushes[0].priority == gold
+
+
+def test_priority_ordering_keeps_intra_bucket_fifo():
+    """A bucket with both a full chunk and a due remainder keeps FIFO:
+    its older full chunk is never resequenced behind the remainder, even
+    though remainder-only ranking (timer) would beat fill."""
+    pol = FlushPolicy(kind="deadline", max_batch=2, max_wait=0.5)
+    q = AutobatchQueue(pol)
+    for i in range(3):
+        q.submit(req(i, n=16, arrival=0.0), now=0.0)
+    flushes = q.pop_ready(now=0.5)     # max-wait due for the remainder
+    assert [f.reason for f in flushes] == [FLUSH_FULL, FLUSH_MAX_WAIT]
+    assert [r.req_id for f in flushes for r in f.requests] == [0, 1, 2]
+
+
+def test_run_service_multi_tenant_records_and_summary():
+    """Per-tenant record labels flow into the summarize breakdown."""
+    pol = FlushPolicy(kind="deadline", max_batch=2, max_wait=0.1)
+    reqs = [req(0, n=8, model_id="a", tenant="a", arrival=0.0),
+            req(1, n=8, model_id="b", tenant="b", arrival=0.0),
+            req(2, n=8, model_id="b", tenant="b", arrival=0.0)]
+    service = run_service(reqs, execute=lambda fl: 0.05, policy=pol)
+    assert {r["tenant"] for r in service["records"]} == {"a", "b"}
+    summary = summarize_service(service)
+    assert set(summary["per_tenant"]) == {"a", "b"}
+    assert summary["per_tenant"]["b"]["requests"] == 2
+    assert summary["per_tenant"]["a"]["latency_p95_s"] > 0.0
 
 
 def test_make_arrivals_offered_load_and_shape():

@@ -1,0 +1,128 @@
+"""Multi-tenant smoother serving: routing isolation and correctness.
+
+The queue may reorder and batch however it likes, but every request
+must come back smoothed by *its own tenant's* model and method — the
+oracle is the per-request single-trajectory smoother under the tenant's
+registry configuration.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import iterated_smoother
+from repro.launch.autobatch import FlushPolicy
+from repro.launch.serve import (MultiTenantServer, SmootherServeConfig,
+                                SmootherServer, TenantSpec)
+from repro.scenarios import get_scenario
+
+CFG = SmootherServeConfig(requests=6, n=8, max_batch=2, n_iter=2, tol=0.0,
+                          f64=True, max_wait_s=0.05, deadline_s=0.5)
+TENANTS = [TenantSpec.parse("pendulum:gold"),
+           TenantSpec.parse("stochastic_volatility:batch")]
+
+
+@pytest.fixture(scope="module")
+def served():
+    server = MultiTenantServer(TENANTS, CFG)
+    requests = []
+    for i, tenant in enumerate(["pendulum", "stochastic_volatility"] * 3):
+        sc = get_scenario(tenant)
+        _, ys = sc.simulate(server.servers[tenant].model, 8,
+                            jax.random.PRNGKey(40 + i))
+        requests.append((tenant, np.asarray(ys)))
+    arrivals = np.zeros(len(requests))
+    stats = server.serve_stream(requests, arrivals, emit=lambda *_: None)
+    return server, requests, stats
+
+
+def test_tenantspec_parse():
+    spec = TenantSpec.parse("lorenz96:batch:0.5")
+    assert (spec.scenario, spec.slo, spec.weight) == ("lorenz96", "batch",
+                                                      0.5)
+    assert TenantSpec.parse("pendulum").slo == "standard"
+    assert np.isinf(spec.budget_s)   # batch class: no deadline
+    # Empty fields take defaults; junk weights get a syntax error.
+    assert TenantSpec.parse("pendulum::2.0").weight == 2.0
+    assert TenantSpec.parse("pendulum:gold:").weight == 1.0
+    with pytest.raises(ValueError, match="unknown SLO class"):
+        TenantSpec.parse("pendulum:platinum")
+    with pytest.raises(ValueError, match="weight must be a float"):
+        TenantSpec.parse("pendulum:gold:heavy")
+
+
+def test_results_match_per_tenant_oracle(served):
+    """Each request's trajectory equals its own tenant's single-request
+    smoother — queue batching never mixes models."""
+    server, requests, stats = served
+    for (tenant, ys), mean in zip(requests, stats["results"]):
+        srv = server.servers[tenant]
+        want = iterated_smoother(srv.model, np.asarray(ys), srv.icfg)
+        np.testing.assert_allclose(mean, np.asarray(want.mean),
+                                   rtol=1e-8, atol=1e-8)
+
+
+def test_no_launch_mixes_tenants(served):
+    """Every launch's member requests belong to exactly one tenant, and
+    the launch signature carries that tenant's model route."""
+    server, requests, stats = served
+    tenant_of = {i: t for i, (t, _) in enumerate(requests)}
+    assert len(stats["launch_log"]) >= 2     # both tenants launched
+    seen_tenants = set()
+    for launch in stats["launch_log"]:
+        launch_tenants = {tenant_of[i] for i in launch["req_ids"]}
+        assert len(launch_tenants) == 1      # no cross-tenant mixing
+        tenant = launch_tenants.pop()
+        assert launch["tenants"] == [tenant]
+        assert launch["signature"][0] == server.servers[tenant].model_id
+        seen_tenants.add(tenant)
+    assert seen_tenants == {"pendulum", "stochastic_volatility"}
+
+
+def test_per_tenant_breakdown_and_fit_scores(served):
+    server, requests, stats = served
+    assert set(stats["per_tenant"]) == {"pendulum", "stochastic_volatility"}
+    for digest in stats["per_tenant"].values():
+        assert digest["requests"] == 3
+        assert digest["latency_p95_s"] > 0.0
+        assert 0.0 <= digest["deadline_hit_rate"] <= 1.0
+    assert all(ll is not None and np.isfinite(ll)
+               for ll in stats["logliks"])
+
+
+def test_jit_cache_bounded_across_tenants(served):
+    """pow2 width quantization holds per tenant: with max_batch=2 and a
+    single time bucket, each tenant compiles at most 2 widths (plus its
+    warmup signatures, which are the same keys)."""
+    server, requests, stats = served
+    for tenant, srv in server.servers.items():
+        assert len(srv.signatures_seen) <= 2
+        # All keys carry this tenant's own model_id — no drift.
+        for key in srv.signatures_seen:
+            assert key[0].model_id == srv.model_id
+
+
+def test_duplicate_route_rejected():
+    with pytest.raises(ValueError, match="same .model_id, method."):
+        MultiTenantServer([TenantSpec.parse("pendulum"),
+                           TenantSpec(tenant="p2", scenario="pendulum")],
+                          CFG)
+
+
+def test_priority_tenant_wins_contended_executor():
+    """Under a simultaneous burst with a deadline policy, the gold
+    tenant's bucket launches before the batch tenant's."""
+    server = MultiTenantServer(TENANTS, CFG)
+    requests = []
+    for i, tenant in enumerate(["stochastic_volatility", "pendulum"]):
+        sc = get_scenario(tenant)
+        _, ys = sc.simulate(server.servers[tenant].model, 8,
+                            jax.random.PRNGKey(60 + i))
+        requests.append((tenant, np.asarray(ys)))
+    stats = server.serve_stream(
+        requests, np.zeros(2), emit=lambda *_: None,
+        policy=FlushPolicy(kind="deadline", max_batch=4, max_wait=0.05))
+    recs = {r["tenant"]: r for r in stats["records"]}
+    # Equal arrival and flush instant; the gold request must not queue
+    # behind batch-tier compute.
+    assert recs["pendulum"]["queue_wait_s"] <= \
+        recs["stochastic_volatility"]["queue_wait_s"]

@@ -1,0 +1,108 @@
+"""Scenario-registry round-trip: every registered scenario must
+simulate, smooth with its default configuration, keep parallel ==
+sequential parity (the paper's core claim, per scenario), and improve
+the smoothed log-likelihood fit score over the un-iterated prior
+trajectory. Plus the model_id stability contract the multi-tenant
+bucket signature builds on."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (initial_trajectory, iterated_smoother,
+                        iterated_smoother_batched, smoothed_log_likelihood)
+from repro.scenarios import get_scenario, list_scenarios
+
+N = 16
+ITERS = 2
+
+
+@pytest.fixture(scope="module", params=list_scenarios())
+def scenario_run(request):
+    sc = get_scenario(request.param)
+    model = sc.make_model(jnp.float64)
+    xs, ys = sc.simulate(model, N, jax.random.PRNGKey(0))
+    cfg = sc.default_config(n_iter=ITERS)
+    traj = iterated_smoother(model, ys, cfg)
+    return sc, model, xs, ys, cfg, traj
+
+
+def test_catalogue_size():
+    assert len(list_scenarios()) >= 5
+
+
+def test_simulate_shapes_and_finiteness(scenario_run):
+    sc, model, xs, ys, cfg, traj = scenario_run
+    assert xs.shape == (N + 1, sc.nx)
+    assert ys.shape == (N, sc.ny)
+    assert model.nx == sc.nx and model.ny == sc.ny
+    assert np.all(np.isfinite(np.asarray(xs)))
+    assert np.all(np.isfinite(np.asarray(traj.mean)))
+    assert np.all(np.isfinite(np.asarray(traj.cov)))
+
+
+def test_parallel_sequential_parity(scenario_run):
+    sc, model, xs, ys, cfg, traj = scenario_run
+    seq = iterated_smoother(model, ys,
+                            dataclasses.replace(cfg, parallel=False))
+    np.testing.assert_allclose(np.asarray(traj.mean), np.asarray(seq.mean),
+                               rtol=1e-8, atol=1e-8)
+
+
+def test_loglik_improves_over_prior(scenario_run):
+    sc, model, xs, ys, cfg, traj = scenario_run
+    ll = float(smoothed_log_likelihood(model, ys, traj, cfg))
+    ll0 = float(smoothed_log_likelihood(model, ys,
+                                        initial_trajectory(model, N), cfg))
+    assert np.isfinite(ll)
+    assert ll >= ll0
+
+
+def test_batched_loglik_matches_single(scenario_run):
+    sc, model, xs, ys, cfg, traj = scenario_run
+    ys_b = jnp.stack([ys, ys])
+    traj_b = iterated_smoother_batched(model, ys_b, cfg)
+    ll_b = np.asarray(smoothed_log_likelihood(model, ys_b, traj_b, cfg))
+    ll = float(smoothed_log_likelihood(model, ys, traj, cfg))
+    assert ll_b.shape == (2,)
+    np.testing.assert_allclose(ll_b, ll, rtol=1e-6)
+
+
+def test_model_id_is_stable_and_unique():
+    ids = {name: get_scenario(name).model_id for name in list_scenarios()}
+    # Deterministic across calls (content hash, not object identity).
+    for name in list_scenarios():
+        assert get_scenario(name).model_id == ids[name]
+        assert ids[name].startswith(name + ":")
+    assert len(set(ids.values())) == len(ids)
+
+
+def test_model_id_tracks_params():
+    sc = get_scenario("pendulum")
+    tweaked = dataclasses.replace(
+        sc, params=sc.params + (("extra", 1.0),))
+    assert tweaked.model_id != sc.model_id
+
+
+def test_default_config_carries_model_id_into_cache_key():
+    sc = get_scenario("coordinated_turn")
+    cfg = sc.default_config(n_iter=3)
+    assert cfg.model_id == sc.model_id
+    assert cfg.method == sc.default_method
+    key = cfg.cache_key(16, 4, sc.nx)
+    other = sc.default_config(n_iter=3, model_id="different")
+    assert key != other.cache_key(16, 4, sc.nx)
+
+
+def test_duplicate_registration_rejected():
+    from repro.scenarios import register
+    sc = get_scenario("pendulum")
+    with pytest.raises(ValueError, match="already registered"):
+        register(sc)
+
+
+def test_unknown_scenario_rejected():
+    with pytest.raises(ValueError, match="unknown scenario"):
+        get_scenario("nonexistent_model")
