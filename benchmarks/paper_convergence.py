@@ -10,7 +10,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import IteratedConfig, iterated_smoother
+from repro.core import SmootherSpec, build_smoother
 from repro.data import CoordinatedTurnConfig, make_coordinated_turn_model, \
     simulate_trajectory
 
@@ -23,13 +23,14 @@ def run(n=500, emit=print):
 
     rows = []
     for method in ("ekf", "slr"):
+        lin = "taylor" if method == "ekf" else "slr"
         # LM damping (ref [15]) is the production configuration: undamped
         # Gauss-Newton diverges beyond ~300 steps on this model (in both
         # the parallel and sequential forms; see DESIGN.md §11).
-        cfg = IteratedConfig(method=method, n_iter=10, parallel=True,
-                             lm_lambda=1.0)
+        smoother = build_smoother(SmootherSpec(
+            linearization=lin, n_iter=10, lm_lambda=1.0))
         t0 = time.perf_counter()
-        sm, hist = iterated_smoother(model, ys, cfg, return_history=True)
+        sm, hist = smoother.iterate(model, ys, return_history=True)
         jax.block_until_ready(hist)
         dt = (time.perf_counter() - t0) * 1e6
         for i in range(10):
@@ -40,9 +41,9 @@ def run(n=500, emit=print):
             rows.append((name, dt, f"rmse={rmse:.5f}"))
             emit(f"{name},{dt:.1f},rmse={rmse:.5f}")
         # parallel == sequential check
-        sm_seq = iterated_smoother(
-            model, ys, IteratedConfig(method=method, n_iter=10,
-                                      parallel=False, lm_lambda=1.0))
+        sm_seq = build_smoother(SmootherSpec(
+            mode="sequential", linearization=lin, n_iter=10,
+            lm_lambda=1.0)).iterate(model, ys)
         gap = float(jnp.max(jnp.abs(sm.mean - sm_seq.mean)))
         name = (f"paper_convergence/"
                 f"{'IEKS' if method == 'ekf' else 'IPLS'}/par_vs_seq")
@@ -57,13 +58,12 @@ def run(n=500, emit=print):
         # so the cap, not the tolerance, governs).
         n_es = min(n, 200)
         ys_es = ys[:n_es]
-        cfg_fixed = IteratedConfig(method=method, n_iter=10, parallel=True)
-        cfg_es = IteratedConfig(method=method, n_iter=10, parallel=True,
-                                tol=1e-7)
-        sm_fixed = iterated_smoother(model, ys_es, cfg_fixed)
+        sm_fixed = build_smoother(SmootherSpec(
+            linearization=lin, n_iter=10)).iterate(model, ys_es)
         t0 = time.perf_counter()
-        sm_es, info = iterated_smoother(model, ys_es, cfg_es,
-                                        return_info=True)
+        sm_es, info = build_smoother(SmootherSpec(
+            linearization=lin, n_iter=10, tol=1e-7)).iterate(
+                model, ys_es, return_info=True)
         jax.block_until_ready(sm_es.mean)
         dt_es = (time.perf_counter() - t0) * 1e6
         es_gap = float(jnp.max(jnp.abs(sm_es.mean - sm_fixed.mean)))

@@ -17,7 +17,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import IteratedConfig, iterated_smoother
+from repro.core import SmootherSpec, build_smoother
 from repro.data import CoordinatedTurnConfig, make_coordinated_turn_model, \
     simulate_trajectory
 
@@ -43,12 +43,14 @@ def run(sizes=SIZES, methods=("ekf", "slr"), emit=print):
         _, ys = simulate_trajectory(model, n, jax.random.PRNGKey(n))
         for method in methods:
             for parallel in (False, True):
-                cfg = IteratedConfig(method=method, n_iter=M_ITERS,
-                                     parallel=parallel)
+                smoother = build_smoother(SmootherSpec(
+                    mode="parallel" if parallel else "sequential",
+                    linearization="taylor" if method == "ekf" else "slr",
+                    n_iter=M_ITERS))
 
                 @jax.jit
-                def smooth(y, _cfg=cfg):
-                    return iterated_smoother(model, y, _cfg).mean
+                def smooth(y, _sm=smoother):
+                    return _sm.iterate(model, y).mean
 
                 dt = _time_fn(smooth, ys)
                 span = (2 * M_ITERS * n if not parallel

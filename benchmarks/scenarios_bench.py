@@ -22,7 +22,7 @@ QUICK_N = 32
 
 
 def run(n=N, n_iter=5, quick=False, emit=print):
-    from repro.core import iterated_smoother, smoothed_log_likelihood
+    from repro.core import build_smoother
     from repro.scenarios import get_scenario, list_scenarios
 
     jax.config.update("jax_enable_x64", True)
@@ -35,19 +35,20 @@ def run(n=N, n_iter=5, quick=False, emit=print):
         model = sc.make_model(jnp.float64)
         xs, ys = sc.simulate(model, n, jax.random.PRNGKey(0))
         for method in ("ekf", "slr"):
-            cfg = sc.default_config(method=method, n_iter=n_iter, tol=1e-8)
-            smooth = jax.jit(lambda ys, cfg=cfg: iterated_smoother(
-                model, ys, cfg))
+            spec = sc.default_spec(
+                linearization="taylor" if method == "ekf" else "slr",
+                n_iter=n_iter, tol=1e-8)
+            smoother = build_smoother(spec)
+            smooth = jax.jit(lambda ys, sm=smoother: sm.iterate(model, ys))
             traj = smooth(ys)
             jax.block_until_ready(traj.mean)   # compile + warm
             t0 = time.perf_counter()
             traj = smooth(ys)
             jax.block_until_ready(traj.mean)
             dt = time.perf_counter() - t0
-            ll = float(smoothed_log_likelihood(model, ys, traj, cfg))
-            seq = iterated_smoother(model, ys,
-                                    dataclasses.replace(cfg,
-                                                        parallel=False))
+            ll = float(smoother.log_likelihood(model, ys, traj))
+            seq = build_smoother(dataclasses.replace(
+                spec, mode="sequential")).iterate(model, ys)
             gap = float(jnp.max(jnp.abs(traj.mean - seq.mean)))
             default = "default" if method == sc.default_method else "alt"
             rows.append((

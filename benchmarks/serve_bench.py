@@ -10,11 +10,14 @@ arrival trace), reporting per-request latency percentiles (queue wait is
 simulated-clock, bucket compute is measured wall time; see
 `repro.launch.autobatch`), throughput, launch count, and occupancy.
 
-The `serve/mt/...` rows run the multi-tenant mix (DESIGN.md §7): three
-registry scenarios with distinct SLO classes behind one queue under
+The `serve/mt/...` rows run the multi-tenant mix (DESIGN.md §7): ALL
+SIX registry scenarios with mixed SLO classes behind one queue under
 bursty arrivals, x {static, deadline}, over one shared
-`MultiTenantServer` — tracking the per-tenant p95 and deadline-hit
-breakdown of mixed-model traffic.
+`MultiTenantServer` — every tenant's executable is built through
+`repro.core.build_smoother` from its scenario `SmootherSpec`, and every
+bucket is keyed by the spec's content hash (`spec_id`-derived
+signatures, `autobatch.spec_signature`). Tracks the per-tenant p95 and
+deadline-hit breakdown of mixed-model traffic.
 
 ``us_per_call`` for `serve/...` rows is the **p95 latency** in
 microseconds; the `serve/p95-win/...` rows derive the static/deadline
@@ -45,13 +48,17 @@ def _settings(quick: bool):
     return settings[:2] if quick else settings
 
 
+#: The full scenario catalogue as tenants (mixed SLO classes): each one
+#: becomes a spec-built `SmootherServer` with `spec_id`-keyed buckets.
 TENANTS = ("coordinated_turn:standard", "bearings_only:standard",
-           "pendulum:gold")
+           "pendulum:gold", "lorenz96:batch",
+           "stochastic_volatility:gold", "population:batch")
 
 
 def run_multitenant(requests, n, max_batch, rate, burst_size, emit=print):
-    """Mixed-scenario stream through one shared `MultiTenantServer`,
-    {static, deadline} flush policies over an identical arrival trace."""
+    """Mixed-scenario stream (all six registry scenarios) through one
+    shared `MultiTenantServer`, {static, deadline} flush policies over
+    an identical arrival trace."""
     from repro.launch.autobatch import FlushPolicy, make_arrivals
     from repro.launch.serve import (MultiTenantServer, SmootherServeConfig,
                                     TenantSpec, make_tenant_fleet)

@@ -29,8 +29,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import IteratedConfig, iterated_smoother, \
-    iterated_smoother_batched
+from repro.core import SmootherSpec, build_smoother
 from repro.data import CoordinatedTurnConfig, make_coordinated_turn_model, \
     simulate_trajectory
 
@@ -54,31 +53,32 @@ def _time_fn(fn, *args, reps=REPS):
 def run(n=N_STEPS, batches=BATCHES, n_iter=N_ITER, emit=print):
     model = make_coordinated_turn_model(CoordinatedTurnConfig(),
                                         dtype=jnp.float32)
-    cfg_par = IteratedConfig(method="ekf", n_iter=n_iter, parallel=True,
-                             lm_lambda=1.0)
-    cfg_seq = IteratedConfig(method="ekf", n_iter=n_iter, parallel=False,
-                             lm_lambda=1.0)
+    # One spec per strategy; `Smoother.iterate` picks the single vs
+    # fused-batched driver from the measurement rank.
+    sm_par = build_smoother(SmootherSpec(n_iter=n_iter, lm_lambda=1.0))
+    sm_seq = build_smoother(SmootherSpec(mode="sequential", n_iter=n_iter,
+                                         lm_lambda=1.0))
 
     @jax.jit
     def one_par(ys):
-        return iterated_smoother(model, ys, cfg_par).mean
+        return sm_par.iterate(model, ys).mean
 
     @jax.jit
     def batched_par(ys):
-        return iterated_smoother_batched(model, ys, cfg_par).mean
+        return sm_par.iterate(model, ys).mean
 
     @jax.jit
     def batched_seq(ys):
-        return iterated_smoother_batched(model, ys, cfg_seq).mean
+        return sm_seq.iterate(model, ys).mean
 
     ys1 = simulate_trajectory(model, n, jax.random.PRNGKey(0))[1]
 
     # Naive per-request pattern: no user-level jit, ops dispatch eagerly.
     # One warm call suffices — a Python loop of B such calls is B times
     # one call by construction.
-    iterated_smoother(model, ys1, cfg_par)  # warm compile-free caches
+    sm_par.iterate(model, ys1)  # warm compile-free caches
     t0 = time.perf_counter()
-    out = iterated_smoother(model, ys1, cfg_par)
+    out = sm_par.iterate(model, ys1)
     jax.block_until_ready(out.mean)
     dt_eager_one = time.perf_counter() - t0
 

@@ -1,21 +1,25 @@
 """Quickstart: parallel IEKS on the paper's coordinated-turn model.
 
 Simulates a bearings-only tracking problem, runs the paper's
-parallel-in-time iterated extended Kalman smoother (M=10), and compares
-against the sequential baseline — same posterior, logarithmic span.
+parallel-in-time iterated extended Kalman smoother (M=10) through the
+unified `SmootherSpec`/`build_smoother` API, and compares against the
+sequential baseline — same posterior, logarithmic span.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
-from repro.core import iterated_smoother
+from repro.core import build_smoother
 from repro.scenarios import get_scenario
 
 
 def main():
     # The registry scenario carries the model factory, simulator, and
-    # production smoother defaults (method, damping, model_id).
+    # production smoother defaults (linearization, damping, model_id) —
+    # `default_spec` packages them as one declarative SmootherSpec.
     scenario = get_scenario("coordinated_turn")
     model = scenario.make_model(dtype=jnp.float32)
     xs, ys = scenario.simulate(model, 400, jax.random.PRNGKey(0))
@@ -26,13 +30,16 @@ def main():
     # diverges for n >~ 300 on this model (in parallel AND sequential
     # form — it is an optimization property, not a parallelization
     # artifact; see DESIGN.md).
-    sm_par = iterated_smoother(
-        model, ys, scenario.default_config(n_iter=10, parallel=True))
-    sm_seq = iterated_smoother(
-        model, ys, scenario.default_config(n_iter=10, parallel=False))
+    spec = scenario.default_spec(n_iter=10)       # mode="parallel" default
+    smoother = build_smoother(spec)
+    sm_par = smoother.iterate(model, ys)
+    sm_seq = build_smoother(
+        dataclasses.replace(spec, mode="sequential")).iterate(model, ys)
 
     rmse = jnp.sqrt(jnp.mean((sm_par.mean[1:, :2] - xs[1:, :2]) ** 2))
     gap = jnp.max(jnp.abs(sm_par.mean - sm_seq.mean))
+    print(f"spec: {spec.mode}/{spec.form}/{spec.linearization} "
+          f"(spec_id {spec.spec_id})")
     print(f"IEKS (parallel scan, M=10): position RMSE = {float(rmse):.4f}")
     print(f"parallel vs sequential max-abs gap = {float(gap):.2e}")
     print("span: sequential O(n) = 400 combines/pass; "

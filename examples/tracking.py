@@ -1,6 +1,8 @@
 """State-estimation end-to-end driver (the paper's application):
 IEKS vs IPLS (cubature) on the coordinated-turn model, with per-iteration
-RMSE, Levenberg-Marquardt damping, and the Pallas fused-combine path.
+RMSE, Levenberg-Marquardt damping, the square-root form, and the Pallas
+fused-combine path — every row is one `SmootherSpec` through
+`build_smoother`.
 
     PYTHONPATH=src python examples/tracking.py [--n 1000] [--iters 10]
 """
@@ -10,7 +12,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import iterated_smoother
+from repro.core import build_smoother
 from repro.scenarios import get_scenario
 
 
@@ -33,21 +35,26 @@ def main():
 
     # Undamped IEKS/IPLS diverge on horizons beyond ~300 steps of this
     # model (Gauss-Newton property; paper ref [15]) — the damped rows show
-    # the production-ready configuration (the scenario default).
-    for label, cfg in [
-        ("IEKS  (Taylor, undamped)", scenario.default_config(
-            method="ekf", n_iter=args.iters, lm_lambda=0.0)),
-        ("IPLS  (cubature SLR)    ", scenario.default_config(
-            method="slr", sigma_scheme="cubature", n_iter=args.iters,
-            lm_lambda=0.0)),
-        ("LM-IEKS (damped, 1.0)   ", scenario.default_config(
-            method="ekf", n_iter=args.iters, lm_lambda=1.0)),
-        ("LM-IEKS + Pallas combine", scenario.default_config(
-            method="ekf", n_iter=args.iters, lm_lambda=1.0,
+    # the production-ready configuration (the scenario default). The
+    # sqrt-form row is the float32-robust path (DESIGN.md §9).
+    for label, spec in [
+        ("IEKS  (Taylor, undamped)", scenario.default_spec(
+            linearization="taylor", n_iter=args.iters, lm_lambda=0.0)),
+        ("IPLS  (cubature SLR)    ", scenario.default_spec(
+            linearization="slr", sigma_scheme="cubature",
+            n_iter=args.iters, lm_lambda=0.0)),
+        ("LM-IEKS (damped, 1.0)   ", scenario.default_spec(
+            linearization="taylor", n_iter=args.iters, lm_lambda=1.0)),
+        ("LM-IEKS (sqrt form)     ", scenario.default_spec(
+            linearization="taylor", n_iter=args.iters, lm_lambda=1.0,
+            form="sqrt")),
+        ("LM-IEKS + Pallas combine", scenario.default_spec(
+            linearization="taylor", n_iter=args.iters, lm_lambda=1.0,
             combine_impl="pallas")),
     ]:
+        smoother = build_smoother(spec)
         t0 = time.perf_counter()
-        sm, hist = iterated_smoother(model, ys, cfg, return_history=True)
+        sm, hist = smoother.iterate(model, ys, return_history=True)
         jax.block_until_ready(sm.mean)
         dt = time.perf_counter() - t0
         track = " -> ".join(f"{rmse(hist[i], xs):.4f}"

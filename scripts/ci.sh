@@ -22,11 +22,18 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 TEST_BUDGET="${CI_TEST_BUDGET:-3600}"   # seconds
 BENCH_BUDGET="${CI_BENCH_BUDGET:-600}"  # seconds
 
+echo "== public API surface (python -m repro.core.api --dump-surface) =="
+# The committed snapshot is the contract: a PR that grows or breaks the
+# repro.core surface must regenerate tests/api_surface.txt on purpose.
+SURFACE_TMP="$(mktemp)"
+timeout 300 python -m repro.core.api --dump-surface > "${SURFACE_TMP}"
+diff -u tests/api_surface.txt "${SURFACE_TMP}"
+
 echo "== tier-1 tests (budget ${TEST_BUDGET}s) =="
 timeout "${TEST_BUDGET}" python -m pytest -x -q "$@"
 
-echo "== scenario smoke matrix (every scenario x both linearizations) =="
-timeout 600 python -m repro.scenarios.smoke --n 24 --iters 3
+echo "== scenario smoke matrix (scenario x linearization x form) =="
+timeout 900 python -m repro.scenarios.smoke --n 24 --iters 3
 
 echo "== quick perf paths (budget ${BENCH_BUDGET}s) =="
 BENCH_OUT="$(mktemp -d)/BENCH_ci_quick.json"

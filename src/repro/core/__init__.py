@@ -1,18 +1,26 @@
 """Parallel iterated extended & sigma-point Kalman smoothers (paper core).
 
-Public API:
+Public API (DESIGN.md §Public API):
+  * THE estimator surface: SmootherSpec (one frozen spec over every axis
+    — mode, form, linearization, sigma scheme, iteration control — with
+    the stable content-hash ``spec_id``) + build_smoother(spec) ->
+    Smoother with .filter/.smooth/.iterate/.log_likelihood, single or
+    batched by inspecting leading dims
   * types: Gaussian, LinearizedSSM, FilteringElement, SmoothingElement,
     StateSpaceModel
-  * sequential baselines: kalman_filter, rts_smoother, filter_smoother
-    (+ *_batched forms running B lanes in one scan)
-  * parallel-in-time: parallel_filter, parallel_smoother,
-    parallel_filter_smoother, filtering/smoothing elements + combines
-    (+ *_batched forms fusing B x T elements into one scan per level)
-  * iterated drivers: ieks, ipls, iterated_smoother,
-    iterated_smoother_batched, IteratedConfig (tol>0 enables adaptive
-    early stopping), IterationInfo
+  * kernel layer the spec dispatches onto — sequential baselines
+    (kalman_filter, rts_smoother, filter_smoother), parallel-in-time
+    (parallel_filter/_smoother/_filter_smoother, elements + combines),
+    square-root forms, iterated drivers (iterated_smoother,
+    IteratedConfig, IterationInfo), smoothed_log_likelihood
   * scan engine: associative_scan (batch_dims-aware),
     sharded_associative_scan, linear_recurrence_scan
+  * deprecated shims (warn once, delegate to build_smoother): ieks,
+    ipls, and the ``*_filter_smoother_batched`` /
+    ``iterated_smoother_batched`` twins
+
+The surface is snapshot-checked: ``python -m repro.core.api
+--dump-surface`` vs ``tests/api_surface.txt`` (scripts/ci.sh).
 """
 from .types import (Gaussian, LinearizedSSM, FilteringElement,
                     SmoothingElement, StateSpaceModel, symmetrize,
@@ -49,8 +57,10 @@ from .sqrt_parallel import (SqrtFilteringElement, SqrtSmoothingElement,
                             sqrt_parallel_filter_batched,
                             sqrt_parallel_smoother_batched,
                             sqrt_parallel_filter_smoother_batched, tria)
+from .api import SmootherSpec, Smoother, build_smoother
 
 __all__ = [
+    "SmootherSpec", "Smoother", "build_smoother",
     "Gaussian", "LinearizedSSM", "FilteringElement", "SmoothingElement",
     "StateSpaceModel", "symmetrize", "mvn_logpdf",
     "cubature", "unscented", "gauss_hermite", "get_scheme",

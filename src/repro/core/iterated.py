@@ -28,15 +28,34 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from . import parallel, sequential
+from . import parallel, sequential, sqrt_parallel
+from ._deprecation import warn_deprecated
 from .linearization import (linearize_model_slr, linearize_model_slr_batched,
                             linearize_model_taylor,
                             linearize_model_taylor_batched)
-from .sigma_points import SigmaScheme, get_scheme
+from .sigma_points import SCHEMES, SigmaScheme, get_scheme
 from .types import (Gaussian, LinearizedSSM, StateSpaceModel, bmm, bmv,
                     mvn_logpdf)
 
 jtm = jax.tree_util.tree_map
+
+#: Axis vocabularies shared with `repro.core.api.SmootherSpec` — defined
+#: here (the leaf module) so the two validators can never drift.
+FORMS = ("standard", "sqrt")
+COMBINE_IMPLS = ("auto", "jnp", "fused", "pallas")
+
+
+def validate_iteration_knobs(n_iter: int, tol: float, lm_lambda: float,
+                             jitter: float) -> None:
+    """Shared numeric-knob validation for IteratedConfig/SmootherSpec."""
+    if n_iter < 1:
+        raise ValueError(f"n_iter must be >= 1, got {n_iter}")
+    if tol < 0.0:
+        raise ValueError(f"tol must be >= 0, got {tol}")
+    if lm_lambda < 0.0:
+        raise ValueError(f"lm_lambda must be >= 0, got {lm_lambda}")
+    if jitter < 0.0:
+        raise ValueError(f"jitter must be >= 0, got {jitter}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +69,31 @@ class IteratedConfig:
     jitter: float = 0.0
     tol: float = 0.0                # early-stop mean-delta tol (0 = fixed M)
     model_id: str = ""              # scenario content hash (registry tenants)
+    form: str = "standard"          # "standard" | "sqrt" (parallel only)
+
+    def __post_init__(self):
+        """Eager validation: a bad axis name or iteration knob must fail
+        here with a readable message, not deep inside a traced scan."""
+        if self.method not in ("ekf", "slr"):
+            raise ValueError(f"unknown method {self.method!r}; "
+                             f"available: ['ekf', 'slr']")
+        if self.form not in FORMS:
+            raise ValueError(f"unknown form {self.form!r}; "
+                             f"available: {sorted(FORMS)}")
+        if self.form == "sqrt" and not self.parallel:
+            raise ValueError(
+                'form="sqrt" requires parallel=True: no sequential '
+                "square-root pass is implemented (DESIGN.md §9)")
+        if self.sigma_scheme not in SCHEMES:
+            raise ValueError(
+                f"unknown sigma-point scheme {self.sigma_scheme!r}; "
+                f"available: {sorted(SCHEMES)}")
+        if self.combine_impl not in COMBINE_IMPLS:
+            raise ValueError(
+                f"unknown combine_impl {self.combine_impl!r}; "
+                f"available: {sorted(COMBINE_IMPLS)}")
+        validate_iteration_knobs(self.n_iter, self.tol, self.lm_lambda,
+                                 self.jitter)
 
     def resolved_combine_impl(self, batched: bool) -> str:
         """"auto" = textbook vmap for single trajectories, the fused
@@ -122,9 +166,13 @@ def _one_pass(model: StateSpaceModel, ys: jnp.ndarray, traj: Gaussian,
         ys_eff = jnp.concatenate([ys, pseudo], axis=-1)
 
     if cfg.parallel:
-        _, smoothed = parallel.parallel_filter_smoother(
-            lin, ys_eff, model.m0, model.P0,
-            combine_impl=cfg.resolved_combine_impl(batched=False))
+        if cfg.form == "sqrt":
+            _, smoothed = sqrt_parallel.sqrt_parallel_filter_smoother(
+                lin, ys_eff, model.m0, model.P0)
+        else:
+            _, smoothed = parallel.parallel_filter_smoother(
+                lin, ys_eff, model.m0, model.P0,
+                combine_impl=cfg.resolved_combine_impl(batched=False))
     else:
         _, smoothed = sequential.filter_smoother(lin, ys_eff, model.m0,
                                                  model.P0)
@@ -148,11 +196,16 @@ def _one_pass_batched(model: StateSpaceModel, ys: jnp.ndarray,
         ys_eff = jnp.concatenate([ys, pseudo], axis=-1)
 
     if cfg.parallel:
-        _, smoothed = parallel.parallel_filter_smoother_batched(
-            lin, ys_eff, model.m0, model.P0,
-            combine_impl=cfg.resolved_combine_impl(batched=True))
+        if cfg.form == "sqrt":
+            _, smoothed = \
+                sqrt_parallel._sqrt_parallel_filter_smoother_batched(
+                    lin, ys_eff, model.m0, model.P0)
+        else:
+            _, smoothed = parallel._parallel_filter_smoother_batched(
+                lin, ys_eff, model.m0, model.P0,
+                combine_impl=cfg.resolved_combine_impl(batched=True))
     else:
-        _, smoothed = sequential.filter_smoother_batched(
+        _, smoothed = sequential._filter_smoother_batched(
             lin, ys_eff, model.m0, model.P0)
     return smoothed
 
@@ -248,11 +301,11 @@ def _freeze_lanes(active: jnp.ndarray, new: Gaussian, old: Gaussian
     return jtm(sel, new, old)
 
 
-def iterated_smoother_batched(model: StateSpaceModel, ys: jnp.ndarray,
-                              cfg: IteratedConfig = IteratedConfig(),
-                              init: Optional[Gaussian] = None,
-                              return_history: bool = False,
-                              return_info: bool = False):
+def _iterated_smoother_batched(model: StateSpaceModel, ys: jnp.ndarray,
+                               cfg: IteratedConfig = IteratedConfig(),
+                               init: Optional[Gaussian] = None,
+                               return_history: bool = False,
+                               return_info: bool = False):
     """Batched iterated smoother over ``ys [B, n, ny]``.
 
     Every pass runs all B trajectories through one fused batched
@@ -352,16 +405,47 @@ def smoothed_log_likelihood(model: StateSpaceModel, ys: jnp.ndarray,
     return lls if per_step else jnp.sum(lls, axis=-1)
 
 
+# ---------------------------------------------------------------------------
+# Legacy entry points (delegating shims; warn once per process)
+# ---------------------------------------------------------------------------
+
+def iterated_smoother_batched(model, ys,
+                              cfg: IteratedConfig = IteratedConfig(),
+                              init=None, return_history: bool = False,
+                              return_info: bool = False):
+    """Deprecated: `build_smoother(spec).iterate` dispatches single vs
+    batched from ``ys.ndim`` — there is no separate batched driver on
+    the public surface any more."""
+    from .api import SmootherSpec, build_smoother
+    warn_deprecated("iterated_smoother_batched",
+                    "build_smoother(SmootherSpec(...)).iterate(model, ys)")
+    return build_smoother(SmootherSpec.from_iterated_config(cfg)).iterate(
+        model, ys, init=init, return_history=return_history,
+        return_info=return_info)
+
+
 def ieks(model, ys, n_iter: int = 10, parallel_mode: bool = True, **kw):
-    """Iterated extended Kalman smoother (paper's IEKS)."""
+    """Deprecated alias for the paper's IEKS: Taylor linearization
+    through `build_smoother`."""
+    from .api import SmootherSpec, build_smoother
+    warn_deprecated(
+        "ieks", 'build_smoother(SmootherSpec(linearization="taylor", '
+        '...)).iterate(model, ys)')
     cfg = IteratedConfig(method="ekf", n_iter=n_iter, parallel=parallel_mode,
                          **kw)
-    return iterated_smoother(model, ys, cfg)
+    return build_smoother(SmootherSpec.from_iterated_config(cfg)).iterate(
+        model, ys)
 
 
 def ipls(model, ys, n_iter: int = 10, parallel_mode: bool = True,
          sigma_scheme: str = "cubature", **kw):
-    """Iterated posterior-linearization smoother (paper's IPLS)."""
+    """Deprecated alias for the paper's IPLS: sigma-point SLR
+    linearization through `build_smoother`."""
+    from .api import SmootherSpec, build_smoother
+    warn_deprecated(
+        "ipls", 'build_smoother(SmootherSpec(linearization="slr", '
+        '...)).iterate(model, ys)')
     cfg = IteratedConfig(method="slr", n_iter=n_iter, parallel=parallel_mode,
                          sigma_scheme=sigma_scheme, **kw)
-    return iterated_smoother(model, ys, cfg)
+    return build_smoother(SmootherSpec.from_iterated_config(cfg)).iterate(
+        model, ys)

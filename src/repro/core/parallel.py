@@ -349,11 +349,11 @@ def parallel_smoother_batched(lin: LinearizedSSM, filtered: Gaussian,
                     cov=jnp.concatenate([P0_s[:, None], covs], axis=1))
 
 
-def parallel_filter_smoother_batched(lin: LinearizedSSM, ys: jnp.ndarray,
-                                     m0: jnp.ndarray, P0: jnp.ndarray,
-                                     *, combine_impl: str = "fused",
-                                     axis_name: str = None
-                                     ) -> Tuple[Gaussian, Gaussian]:
+def _parallel_filter_smoother_batched(lin: LinearizedSSM, ys: jnp.ndarray,
+                                      m0: jnp.ndarray, P0: jnp.ndarray,
+                                      *, combine_impl: str = "fused",
+                                      axis_name: str = None
+                                      ) -> Tuple[Gaussian, Gaussian]:
     filtered = parallel_filter_batched(lin, ys, m0, P0,
                                        combine_impl=combine_impl,
                                        axis_name=axis_name)
@@ -361,3 +361,24 @@ def parallel_filter_smoother_batched(lin: LinearizedSSM, ys: jnp.ndarray,
                                          combine_impl=combine_impl,
                                          axis_name=axis_name)
     return filtered, smoothed
+
+
+def parallel_filter_smoother_batched(lin: LinearizedSSM, ys: jnp.ndarray,
+                                     m0: jnp.ndarray, P0: jnp.ndarray,
+                                     *, combine_impl: str = "fused",
+                                     axis_name: str = None
+                                     ) -> Tuple[Gaussian, Gaussian]:
+    """Deprecated: `build_smoother(spec).smooth` dispatches single vs
+    batched from ``ys.ndim``."""
+    from ._deprecation import warn_deprecated
+    from .api import build_smoother
+    warn_deprecated(
+        "parallel_filter_smoother_batched",
+        'build_smoother(mode="parallel").smooth(lin, ys, m0, P0)')
+    if axis_name is not None:
+        # The sharded path is not representable on the spec axes yet.
+        return _parallel_filter_smoother_batched(
+            lin, ys, m0, P0, combine_impl=combine_impl,
+            axis_name=axis_name)
+    return build_smoother(combine_impl=combine_impl).smooth(lin, ys, m0,
+                                                            P0)

@@ -171,10 +171,23 @@ def rts_smoother_batched(lin: LinearizedSSM, filtered: Gaussian,
     return Gaussian(mean=mean, cov=cov)
 
 
-def filter_smoother_batched(lin: LinearizedSSM, ys: jnp.ndarray,
-                            m0: jnp.ndarray, P0: jnp.ndarray
-                            ) -> Tuple[Gaussian, Gaussian]:
+def _filter_smoother_batched(lin: LinearizedSSM, ys: jnp.ndarray,
+                             m0: jnp.ndarray, P0: jnp.ndarray
+                             ) -> Tuple[Gaussian, Gaussian]:
     """One batched sequential pass. Smoothed has shape ``[B, n+1, ...]``."""
     filtered = kalman_filter_batched(lin, ys, m0, P0)
     smoothed = rts_smoother_batched(lin, filtered, m0, P0)
     return filtered, smoothed
+
+
+def filter_smoother_batched(lin: LinearizedSSM, ys: jnp.ndarray,
+                            m0: jnp.ndarray, P0: jnp.ndarray
+                            ) -> Tuple[Gaussian, Gaussian]:
+    """Deprecated: `build_smoother(spec).smooth` dispatches single vs
+    batched from ``ys.ndim``."""
+    from ._deprecation import warn_deprecated
+    from .api import build_smoother
+    warn_deprecated(
+        "filter_smoother_batched",
+        'build_smoother(mode="sequential").smooth(lin, ys, m0, P0)')
+    return build_smoother(mode="sequential").smooth(lin, ys, m0, P0)

@@ -343,8 +343,20 @@ def sqrt_parallel_smoother_batched(lin: LinearizedSSM, filtered: Gaussian,
                     cov=jnp.concatenate([P0_s[:, None], covs], axis=1))
 
 
-def sqrt_parallel_filter_smoother_batched(lin: LinearizedSSM, ys, m0, P0
-                                          ) -> Tuple[Gaussian, Gaussian]:
+def _sqrt_parallel_filter_smoother_batched(lin: LinearizedSSM, ys, m0, P0
+                                           ) -> Tuple[Gaussian, Gaussian]:
     filtered = sqrt_parallel_filter_batched(lin, ys, m0, P0)
     smoothed = sqrt_parallel_smoother_batched(lin, filtered, m0, P0)
     return filtered, smoothed
+
+
+def sqrt_parallel_filter_smoother_batched(lin: LinearizedSSM, ys, m0, P0
+                                          ) -> Tuple[Gaussian, Gaussian]:
+    """Deprecated: `build_smoother(spec).smooth` dispatches single vs
+    batched from ``ys.ndim``."""
+    from ._deprecation import warn_deprecated
+    from .api import build_smoother
+    warn_deprecated(
+        "sqrt_parallel_filter_smoother_batched",
+        'build_smoother(form="sqrt").smooth(lin, ys, m0, P0)')
+    return build_smoother(form="sqrt").smooth(lin, ys, m0, P0)

@@ -89,6 +89,19 @@ def bucket_signature(model_id: str, method: str, n: int, nx: int
     return (str(model_id), str(method), next_pow2(n), int(nx))
 
 
+def spec_signature(spec, n: int, nx: int) -> Signature:
+    """Bucket key for a `repro.core.SmootherSpec`-built server.
+
+    The tenant slot carries ``spec.spec_id`` — the stable content hash
+    over EVERY spec axis (model_id, linearization, form, iteration
+    knobs, ...) — so any semantically meaningful change re-keys the
+    bucket space and the jit caches with it; the legacy ``method`` slot
+    stays for tuple-shape compatibility. Duck-typed (reads ``.spec_id``
+    and ``.method``) to keep this module jax-free.
+    """
+    return bucket_signature(spec.spec_id, spec.method, n, nx)
+
+
 @dataclasses.dataclass(frozen=True)
 class SLOClass:
     """One priority/SLO tier: launch priority (lower = more urgent) and

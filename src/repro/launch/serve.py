@@ -27,10 +27,12 @@ Two serving modes:
         --arrival bursty --policy deadline --rate 8 --deadline 2.0
 
 ``--tenants`` makes the smoother workload multi-tenant (DESIGN.md §7):
-each tenant is a scenario from the registry (`repro.scenarios`) with an
-SLO class, one shared autobatching queue routes mixed-scenario traffic
-by the ``(model_id, method, n_pad, nx)`` bucket signature, and the
-summary breaks latency/deadline-hit down per tenant:
+each tenant is a scenario from the registry (`repro.scenarios`), served
+by a `SmootherServer` built from the scenario's `SmootherSpec`
+(`repro.core.build_smoother`) with an SLO class; one shared autobatching
+queue routes mixed-scenario traffic by the ``spec_id``-keyed bucket
+signature (`autobatch.spec_signature`), and the summary breaks
+latency/deadline-hit down per tenant:
 
     python -m repro.launch.serve --workload smoother \
         --tenants coordinated_turn,bearings_only,pendulum:gold \
@@ -50,9 +52,8 @@ import numpy as np
 
 from repro.launch.autobatch import (SLO_CLASSES, ComputeEstimator,
                                     FlushPolicy, QueuedRequest,
-                                    bucket_signature, make_arrivals,
-                                    pad_width, run_service,
-                                    summarize_service)
+                                    make_arrivals, pad_width, run_service,
+                                    spec_signature, summarize_service)
 
 
 # ---------------------------------------------------------------------------
@@ -178,7 +179,7 @@ class SmootherServer:
     """Bucketed batched smoothing service over one state-space model.
 
     Requests (``ys [n_i, ny]``) are grouped by the shared
-    `autobatch.bucket_signature` key ``(model_id, method, next_pow2(n_i),
+    `autobatch.spec_signature` key ``(spec_id, method, next_pow2(n_i),
     nx)``; inside a bucket the time axis is padded to the bucket length
     with zero measurements whose per-step R is inflated by
     ``R_PAD_SCALE`` (an exactly-uninformative update up to float error,
@@ -186,32 +187,45 @@ class SmootherServer:
     by replication to the launch width. Each (B, n) signature jit-caches
     one batched iterated-smoother executable.
 
-    ``icfg`` pins the smoother configuration explicitly (a registry
-    tenant passes ``scenario.default_config(...)``, which carries the
-    scenario ``model_id``); when omitted, it is built from the legacy
-    `SmootherServeConfig` knobs with an empty model id.
+    The smoother configuration is a `repro.core.SmootherSpec` —
+    ``spec`` pins it directly (a registry tenant passes
+    ``scenario.default_spec(...)``, which carries the scenario
+    ``model_id`` into ``spec_id``); ``icfg`` lifts a legacy
+    `IteratedConfig` onto the spec axes; with neither, the spec is built
+    from the `SmootherServeConfig` knobs. Either way the executable is
+    `repro.core.build_smoother`'s and every cache key carries the full
+    spec identity (``IteratedConfig.model_id == spec.spec_id``).
     """
 
     def __init__(self, model, cfg: SmootherServeConfig, icfg=None,
-                 tenant: str = ""):
-        from repro.core import (IteratedConfig, iterated_smoother_batched,
-                                smoothed_log_likelihood)
+                 tenant: str = "", spec=None):
+        from repro.core import SmootherSpec, build_smoother
 
         self.model = model
         self.cfg = cfg
         self.tenant = tenant
-        self._icfg = icfg if icfg is not None else IteratedConfig(
-            method=cfg.method, n_iter=cfg.n_iter, tol=cfg.tol,
-            parallel=cfg.parallel, lm_lambda=cfg.lm_lambda)
+        if spec is None:
+            if icfg is not None:
+                spec = SmootherSpec.from_iterated_config(icfg)
+            else:
+                spec = SmootherSpec(
+                    mode="parallel" if cfg.parallel else "sequential",
+                    linearization=("taylor" if cfg.method == "ekf"
+                                   else "slr"),
+                    n_iter=cfg.n_iter, tol=cfg.tol,
+                    lm_lambda=cfg.lm_lambda)
+        self.spec = spec
+        self._smoother = build_smoother(spec)
+        self._icfg = self._smoother.config   # model_id == spec.spec_id
 
         def run(ys, r_stack):
             model_b = dataclasses.replace(self.model, R=r_stack)
-            traj, info = iterated_smoother_batched(model_b, ys, self._icfg,
-                                                   return_info=True)
+            traj, info = self._smoother.iterate(model_b, ys,
+                                                return_info=True)
             # Per-step fit scores; padded steps are masked host-side
             # (their inflated-R terms belong to no request).
-            ll_steps = smoothed_log_likelihood(model_b, ys, traj,
-                                               self._icfg, per_step=True)
+            ll_steps = self._smoother.log_likelihood(model_b, ys, traj,
+                                                     per_step=True)
             return traj, info, ll_steps
 
         self._run = jax.jit(run)
@@ -225,14 +239,16 @@ class SmootherServer:
 
     @property
     def model_id(self) -> str:
+        """The server's routing identity: the spec's content hash (rides
+        in the legacy ``model_id`` slot of queue requests and cache
+        keys)."""
         return self._icfg.model_id
 
     def queue_signature(self, n: int):
         """The autobatch bucket key for a request of length ``n`` against
-        this server's model — the single shared key-construction path
-        (DESIGN.md §7)."""
-        return bucket_signature(self._icfg.model_id, self._icfg.method,
-                                n, self.model.nx)
+        this server's spec — the single shared key-construction path
+        (DESIGN.md §7), now derived from ``spec_id``."""
+        return spec_signature(self.spec, n, self.model.nx)
 
     def _pad_bucket(self, batch: List[np.ndarray], n_pad: int, b_pad: int
                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -292,7 +308,7 @@ class SmootherServer:
         """Bucket, pad, and smooth a full request list; returns stats."""
         buckets: Dict[tuple, List[int]] = defaultdict(list)
         for idx, ys in enumerate(requests):
-            # The shared bucket key (autobatch.bucket_signature): the
+            # The shared bucket key (autobatch.spec_signature): the
             # one-shot path and the streaming queue cannot drift.
             buckets[self.queue_signature(len(ys))].append(idx)
 
@@ -453,6 +469,18 @@ class TenantSpec:
         return (self.deadline_s if self.deadline_s is not None
                 else self.slo_class.deadline_s)
 
+    def smoother_spec(self, cfg: "SmootherServeConfig"):
+        """The tenant's `repro.core.SmootherSpec`: the registry
+        scenario's production defaults (linearization family, sigma
+        scheme, damping, ``model_id``) plus the service-level iteration
+        knobs — the declarative contract its `SmootherServer` is built
+        from."""
+        from repro.scenarios import get_scenario
+
+        return get_scenario(self.scenario).default_spec(
+            n_iter=cfg.n_iter, tol=cfg.tol,
+            mode="parallel" if cfg.parallel else "sequential")
+
 
 class MultiTenantServer:
     """One autobatching queue over several scenario models.
@@ -478,20 +506,19 @@ class MultiTenantServer:
         self.specs: Dict[str, TenantSpec] = {}
         self.servers: Dict[str, SmootherServer] = {}
         self._by_model: Dict[Tuple[str, str], SmootherServer] = {}
-        for spec in tenants:
-            if spec.tenant in self.specs:
-                raise ValueError(f"duplicate tenant {spec.tenant!r}")
-            sc = get_scenario(spec.scenario)
-            icfg = sc.default_config(n_iter=cfg.n_iter, tol=cfg.tol,
-                                     parallel=cfg.parallel)
-            server = SmootherServer(sc.make_model(dtype), cfg, icfg=icfg,
-                                    tenant=spec.tenant)
-            self.specs[spec.tenant] = spec
-            self.servers[spec.tenant] = server
-            route = (server.model_id, icfg.method)
+        for tspec in tenants:
+            if tspec.tenant in self.specs:
+                raise ValueError(f"duplicate tenant {tspec.tenant!r}")
+            sc = get_scenario(tspec.scenario)
+            sspec = tspec.smoother_spec(cfg)
+            server = SmootherServer(sc.make_model(dtype), cfg, spec=sspec,
+                                    tenant=tspec.tenant)
+            self.specs[tspec.tenant] = tspec
+            self.servers[tspec.tenant] = server
+            route = (server.model_id, sspec.method)
             if route in self._by_model:
                 raise ValueError(
-                    f"tenants {spec.tenant!r} and "
+                    f"tenants {tspec.tenant!r} and "
                     f"{self._by_model[route].tenant!r} resolve to the same "
                     f"(model_id, method) route — deduplicate them upstream")
             self._by_model[route] = server
@@ -653,7 +680,6 @@ def serve_smoother_multitenant(cfg: SmootherServeConfig,
 
 def serve_smoother(cfg: SmootherServeConfig, emit=print) -> dict:
     """Generate a synthetic coordinated-turn request fleet and serve it."""
-    from repro.core import IteratedConfig
     from repro.scenarios import get_scenario
 
     dtype = jnp.float64 if cfg.f64 else jnp.float32
@@ -674,13 +700,14 @@ def serve_smoother(cfg: SmootherServeConfig, emit=print) -> dict:
         requests.append(np.asarray(ys))
         truths.append(np.asarray(xs))
 
-    # Legacy single-tenant smoother knobs from SmootherServeConfig, but
-    # with the registry model_id in the cache key (shared bucketing
-    # contract with the multi-tenant path).
-    icfg = IteratedConfig(method=cfg.method, n_iter=cfg.n_iter, tol=cfg.tol,
-                          parallel=cfg.parallel, lm_lambda=cfg.lm_lambda,
-                          model_id=sc.model_id)
-    server = SmootherServer(model, cfg, icfg=icfg, tenant=sc.name)
+    # Single-tenant smoother knobs from SmootherServeConfig lifted onto
+    # the scenario's spec (the registry model_id rides inside spec_id —
+    # shared bucketing contract with the multi-tenant path).
+    sspec = sc.default_spec(
+        linearization="taylor" if cfg.method == "ekf" else "slr",
+        mode="parallel" if cfg.parallel else "sequential",
+        n_iter=cfg.n_iter, tol=cfg.tol, lm_lambda=cfg.lm_lambda)
+    server = SmootherServer(model, cfg, spec=sspec, tenant=sc.name)
     if cfg.arrival == "none":
         stats = server.serve_requests(requests, emit=emit)
     else:

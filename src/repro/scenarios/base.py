@@ -31,6 +31,7 @@ from typing import Callable, Dict, List, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.api import SmootherSpec
 from repro.core.iterated import IteratedConfig
 from repro.core.types import StateSpaceModel
 
@@ -96,10 +97,28 @@ class Scenario:
                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         return simulate_trajectory(model, n, key)
 
+    def default_spec(self, **overrides) -> SmootherSpec:
+        """The scenario's production `SmootherSpec`: default
+        linearization family, sigma scheme, damping, and the scenario
+        ``model_id`` (so ``spec_id`` — the identity every cache and
+        bucket signature keys off — covers the model content). Keyword
+        overrides replace any spec field (e.g. ``n_iter``, ``tol``,
+        ``form="sqrt"``, ``mode="sequential"``).
+        """
+        kw = dict(
+            linearization=("taylor" if self.default_method == "ekf"
+                           else "slr"),
+            sigma_scheme=self.sigma_scheme,
+            lm_lambda=self.lm_lambda,
+            model_id=self.model_id)
+        kw.update(overrides)
+        return SmootherSpec(**kw)
+
     def default_config(self, **overrides) -> IteratedConfig:
-        """The scenario's production `IteratedConfig`: default
-        linearization, damping, and the ``model_id`` cache-key component.
-        Keyword overrides replace any field (e.g. ``n_iter``, ``tol``)."""
+        """Legacy twin of :meth:`default_spec`: the production
+        `IteratedConfig` with the raw scenario ``model_id`` (NOT the
+        spec_id) in the cache-key slot. Kept for existing callers;
+        spec-built servers route through :meth:`default_spec`."""
         kw = dict(method=self.default_method,
                   sigma_scheme=self.sigma_scheme,
                   lm_lambda=self.lm_lambda,

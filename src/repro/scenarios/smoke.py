@@ -1,11 +1,15 @@
-"""Scenario smoke matrix: every registered scenario x both linearizations.
+"""Scenario smoke matrix: every registered scenario x both
+linearizations x both forms, through the unified `SmootherSpec` API.
 
 The CI gate for the model zoo (`scripts/ci.sh`): each scenario must
 simulate, smooth with *both* linearization methods (not just its
 default) at a tiny horizon, produce finite estimates, keep
 parallel == sequential parity, and not degrade the fit score
-(`smoothed_log_likelihood`) relative to the un-iterated prior
-trajectory.
+(`Smoother.log_likelihood`) relative to the un-iterated prior
+trajectory. The ``form="sqrt"`` cells additionally pin the
+square-root (Cholesky-factor) path against the standard-form posterior
+— every cell is one `build_smoother(spec)` call, so the matrix also
+smokes the spec dispatch itself.
 
     PYTHONPATH=src python -m repro.scenarios.smoke [--n 24] [--iters 3]
 """
@@ -22,40 +26,65 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp  # noqa: E402
 import numpy as np       # noqa: E402
 
-from repro.core import (initial_trajectory, iterated_smoother,  # noqa: E402
-                        smoothed_log_likelihood)
+from repro.core import build_smoother, initial_trajectory  # noqa: E402
 from repro.scenarios import get_scenario, list_scenarios  # noqa: E402
 
-PARITY_TOL = 1e-6   # max-abs parallel-vs-sequential mean gap
+PARITY_TOL = 1e-6        # max-abs parallel-vs-sequential mean gap
+SQRT_PARITY_TOL = 1e-6   # max-abs sqrt-vs-standard mean gap (float64)
 
 
 def run_matrix(n: int = 24, n_iter: int = 3, methods=("ekf", "slr"),
-               emit=print) -> list:
-    """Run the matrix; returns one result dict per (scenario, method)."""
+               forms=("standard", "sqrt"), emit=print) -> list:
+    """Run the matrix; returns one result dict per
+    (scenario, method, form) cell."""
     results = []
     for name in list_scenarios():
         sc = get_scenario(name)
         model = sc.make_model(jnp.float64)
         xs, ys = sc.simulate(model, n, jax.random.PRNGKey(0))
         for method in methods:
-            cfg = sc.default_config(method=method, n_iter=n_iter)
-            sm_par = iterated_smoother(model, ys, cfg)
-            sm_seq = iterated_smoother(
-                model, ys, dataclasses.replace(cfg, parallel=False))
+            spec = sc.default_spec(
+                linearization="taylor" if method == "ekf" else "slr",
+                n_iter=n_iter)
+            smoother = build_smoother(spec)
+            sm_par = smoother.iterate(model, ys)
+            sm_seq = build_smoother(dataclasses.replace(
+                spec, mode="sequential")).iterate(model, ys)
             gap = float(jnp.max(jnp.abs(sm_par.mean - sm_seq.mean)))
-            ll = float(smoothed_log_likelihood(model, ys, sm_par, cfg))
-            ll0 = float(smoothed_log_likelihood(
-                model, ys, initial_trajectory(model, n), cfg))
+            ll = float(smoother.log_likelihood(model, ys, sm_par))
+            ll0 = float(smoother.log_likelihood(
+                model, ys, initial_trajectory(model, n)))
             ok = (np.all(np.isfinite(np.asarray(sm_par.mean)))
                   and gap < PARITY_TOL and np.isfinite(ll) and ll >= ll0)
             results.append({
-                "scenario": name, "method": method, "model_id": sc.model_id,
+                "scenario": name, "method": method, "form": "standard",
+                "model_id": sc.model_id, "spec_id": spec.spec_id,
                 "nx": sc.nx, "ny": sc.ny, "par_seq_gap": gap,
                 "loglik": ll, "loglik_prior": ll0, "ok": bool(ok),
             })
-            emit(f"[smoke] {name:<24} {method:<4} nx={sc.nx} "
+            emit(f"[smoke] {name:<24} {method:<4} standard nx={sc.nx} "
                  f"gap={gap:.2e} loglik={ll:9.2f} "
                  f"(prior {ll0:9.2f}) {'OK' if ok else 'FAIL'}")
+            if "sqrt" not in forms:
+                continue
+            # Square-root form: same posterior as the standard parallel
+            # path (float64), via the Cholesky-factor combines.
+            spec_sq = dataclasses.replace(spec, form="sqrt")
+            sm_sq = build_smoother(spec_sq).iterate(model, ys)
+            sq_gap = float(jnp.max(jnp.abs(sm_sq.mean - sm_par.mean)))
+            ll_sq = float(smoother.log_likelihood(model, ys, sm_sq))
+            ok_sq = (np.all(np.isfinite(np.asarray(sm_sq.mean)))
+                     and sq_gap < SQRT_PARITY_TOL and np.isfinite(ll_sq)
+                     and ll_sq >= ll0)
+            results.append({
+                "scenario": name, "method": method, "form": "sqrt",
+                "model_id": sc.model_id, "spec_id": spec_sq.spec_id,
+                "nx": sc.nx, "ny": sc.ny, "sqrt_std_gap": sq_gap,
+                "loglik": ll_sq, "loglik_prior": ll0, "ok": bool(ok_sq),
+            })
+            emit(f"[smoke] {name:<24} {method:<4} sqrt     nx={sc.nx} "
+                 f"gap={sq_gap:.2e} loglik={ll_sq:9.2f} "
+                 f"(prior {ll0:9.2f}) {'OK' if ok_sq else 'FAIL'}")
     return results
 
 
@@ -67,7 +96,7 @@ def main(argv=None) -> int:
     results = run_matrix(n=args.n, n_iter=args.iters)
     failed = [r for r in results if not r["ok"]]
     print(f"[smoke] {len(results) - len(failed)}/{len(results)} "
-          f"scenario x method cells green")
+          f"scenario x method x form cells green")
     return 1 if failed else 0
 
 

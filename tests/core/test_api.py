@@ -1,0 +1,362 @@
+"""Unified `SmootherSpec`/`build_smoother` estimator API.
+
+Pins the tentpole contracts of the spec surface:
+  * eager validation (bad axis names / iteration knobs fail at
+    construction with readable messages, not inside a traced scan);
+  * dispatch equivalence — every (mode, form, linearization) x
+    (single, batched) cell of `build_smoother` matches the legacy
+    entry-point matrix bit-for-bit;
+  * ``spec_id`` stability: deterministic across process boundaries
+    (subprocess pin) and changes iff a semantically meaningful field
+    changes — the property autobatch bucket signatures and jit caches
+    are keyed on;
+  * the legacy entry points are delegating shims that warn exactly once
+    per process and return identical outputs;
+  * the public-API surface snapshot (``tests/api_surface.txt``) matches
+    ``python -m repro.core.api --dump-surface``.
+"""
+import dataclasses
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (IteratedConfig, Smoother, SmootherSpec,
+                        build_smoother, filter_smoother,
+                        iterated_smoother, kalman_filter, parallel_filter,
+                        parallel_filter_smoother,
+                        sqrt_parallel_filter_smoother)
+from repro.core.api import dump_surface
+from repro.launch.autobatch import spec_signature
+from repro.scenarios import get_scenario
+
+from tests._subproc import check_snippet
+from tests.core.test_parallel_vs_sequential import random_linear_ssm
+
+jtm = jax.tree_util.tree_map
+
+
+# ---------------------------------------------------------------------------
+# Validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bad", [
+    dict(mode="diagonal"),
+    dict(form="cholesky"),
+    dict(linearization="ekf"),          # legacy name must not leak in
+    dict(sigma_scheme="quadrature"),
+    dict(combine_impl="triton"),
+    dict(backend="cuda"),
+    dict(n_iter=0),
+    dict(n_iter=-3),
+    dict(tol=-1e-6),
+    dict(lm_lambda=-1.0),
+    dict(jitter=-1e-9),
+    dict(mode="sequential", form="sqrt"),
+])
+def test_spec_validation_rejects(bad):
+    with pytest.raises(ValueError):
+        SmootherSpec(**bad)
+
+
+def test_spec_validation_messages_are_actionable():
+    with pytest.raises(ValueError, match="unknown mode.*available"):
+        SmootherSpec(mode="bogus")
+    with pytest.raises(ValueError, match="unknown sigma_scheme.*available"):
+        SmootherSpec(sigma_scheme="bogus")
+    with pytest.raises(ValueError, match="n_iter must be >= 1"):
+        SmootherSpec(n_iter=0)
+    with pytest.raises(ValueError, match='form="sqrt" requires'):
+        SmootherSpec(mode="sequential", form="sqrt")
+
+
+@pytest.mark.parametrize("bad", [
+    dict(method="kf"),
+    dict(sigma_scheme="bogus"),
+    dict(combine_impl="bogus"),
+    dict(form="bogus"),
+    dict(form="sqrt", parallel=False),
+    dict(n_iter=0),
+    dict(tol=-0.5),
+    dict(lm_lambda=-1.0),
+])
+def test_iterated_config_validation_rejects(bad):
+    with pytest.raises(ValueError):
+        IteratedConfig(**bad)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch equivalence: the spec surface vs the legacy kernel matrix
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def linear_problem():
+    lin, ys, m0, P0 = random_linear_ssm(jax.random.PRNGKey(3), 14, 3, 2)
+    blin = jtm(lambda x: jnp.stack([x, x]), lin)
+    bys = jnp.stack([ys, ys])
+    return lin, ys, blin, bys, m0, P0
+
+
+@pytest.fixture(scope="module")
+def ct_problem():
+    sc = get_scenario("coordinated_turn")
+    model = sc.make_model(jnp.float64)
+    xs, ys = sc.simulate(model, 16, jax.random.PRNGKey(0))
+    return sc, model, ys
+
+
+def test_smooth_matches_legacy_matrix(linear_problem):
+    """Every (mode, form) cell of `Smoother.smooth` equals its legacy
+    single-trajectory driver; the batched cell equals the single one
+    per lane."""
+    lin, ys, blin, bys, m0, P0 = linear_problem
+    cells = [
+        (SmootherSpec(mode="sequential"), filter_smoother),
+        (SmootherSpec(mode="parallel"), parallel_filter_smoother),
+        (SmootherSpec(form="sqrt"), sqrt_parallel_filter_smoother),
+    ]
+    for spec, legacy in cells:
+        sm = build_smoother(spec)
+        got_f, got_s = sm.smooth(lin, ys, m0, P0)
+        want_f, want_s = legacy(lin, ys, m0, P0)
+        np.testing.assert_array_equal(np.asarray(got_s.mean),
+                                      np.asarray(want_s.mean))
+        np.testing.assert_array_equal(np.asarray(got_f.cov),
+                                      np.asarray(want_f.cov))
+        bf, bs = sm.smooth(blin, bys, m0, P0)
+        assert bs.mean.shape == (2,) + got_s.mean.shape
+        for i in range(2):
+            np.testing.assert_allclose(np.asarray(bs.mean[i]),
+                                       np.asarray(got_s.mean),
+                                       rtol=1e-9, atol=1e-10)
+
+
+def test_filter_matches_legacy(linear_problem):
+    lin, ys, blin, bys, m0, P0 = linear_problem
+    got = build_smoother(SmootherSpec(mode="sequential")).filter(
+        lin, ys, m0, P0)
+    want = kalman_filter(lin, ys, m0, P0)
+    np.testing.assert_array_equal(np.asarray(got.mean),
+                                  np.asarray(want.mean))
+    got_p = build_smoother(SmootherSpec()).filter(lin, ys, m0, P0)
+    want_p = parallel_filter(lin, ys, m0, P0)
+    np.testing.assert_array_equal(np.asarray(got_p.mean),
+                                  np.asarray(want_p.mean))
+
+
+@pytest.mark.parametrize("linearization", ["taylor", "slr"])
+def test_iterate_single_vs_batched_and_legacy(ct_problem, linearization):
+    sc, model, ys = ct_problem
+    spec = sc.default_spec(linearization=linearization, n_iter=2)
+    sm = build_smoother(spec)
+    traj = sm.iterate(model, ys)
+    # Legacy single driver under the equivalent IteratedConfig.
+    want = iterated_smoother(model, ys, sm.config)
+    np.testing.assert_array_equal(np.asarray(traj.mean),
+                                  np.asarray(want.mean))
+    # Batched dispatch from the measurement rank; callable alias.
+    btraj = sm(model, jnp.stack([ys, ys]))
+    assert btraj.mean.shape == (2,) + traj.mean.shape
+    for i in range(2):
+        np.testing.assert_allclose(np.asarray(btraj.mean[i]),
+                                   np.asarray(traj.mean),
+                                   rtol=1e-8, atol=1e-8)
+    ll = sm.log_likelihood(model, ys, traj)
+    ll_b = sm.log_likelihood(model, jnp.stack([ys, ys]), btraj)
+    assert ll_b.shape == (2,)
+    np.testing.assert_allclose(np.asarray(ll_b), float(ll), rtol=1e-6)
+
+
+def test_iterate_sqrt_form_matches_standard(ct_problem):
+    """form="sqrt" through the full iterated loop reproduces the
+    standard-form posterior in float64 (single and batched)."""
+    sc, model, ys = ct_problem
+    spec = sc.default_spec(n_iter=2)
+    std = build_smoother(spec).iterate(model, ys)
+    sq = build_smoother(spec, form="sqrt").iterate(model, ys)
+    np.testing.assert_allclose(np.asarray(sq.mean), np.asarray(std.mean),
+                               rtol=1e-9, atol=1e-9)
+    bsq = build_smoother(spec, form="sqrt").iterate(
+        model, jnp.stack([ys, ys]))
+    np.testing.assert_allclose(np.asarray(bsq.mean[1]),
+                               np.asarray(std.mean), rtol=1e-8, atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# spec_id: the identity caches and bucket signatures key on
+# ---------------------------------------------------------------------------
+
+def test_spec_id_deterministic_and_field_sensitive():
+    spec = SmootherSpec(model_id="pendulum:abc123")
+    assert spec.spec_id == SmootherSpec(model_id="pendulum:abc123").spec_id
+    assert spec.spec_id.startswith("pendulum/")
+    # Every semantically meaningful field re-keys the id.
+    changed = dict(mode="sequential", form="sqrt", linearization="slr",
+                   sigma_scheme="unscented", n_iter=7, tol=1e-5,
+                   lm_lambda=2.0, combine_impl="fused", jitter=1e-9,
+                   model_id="pendulum:def456", backend="pallas")
+    ids = {spec.spec_id}
+    for field, value in changed.items():
+        if field == "form":
+            other = dataclasses.replace(spec, form=value)
+        else:
+            other = dataclasses.replace(spec, **{field: value})
+        assert other.spec_id != spec.spec_id, field
+        ids.add(other.spec_id)
+    # ... and every variant is distinct from every other.
+    assert len(ids) == len(changed) + 1
+
+
+def test_spec_id_stable_across_processes():
+    """The content hash must be reproducible in a fresh interpreter —
+    this is what keeps autobatch bucket signatures and on-disk jit-cache
+    keys coherent across server restarts."""
+    spec = SmootherSpec(linearization="slr", sigma_scheme="unscented",
+                        n_iter=7, tol=1e-5, lm_lambda=0.5,
+                        model_id="pendulum:abc123")
+    out = check_snippet("""
+        from repro.core import SmootherSpec
+        spec = SmootherSpec(linearization="slr", sigma_scheme="unscented",
+                            n_iter=7, tol=1e-5, lm_lambda=0.5,
+                            model_id="pendulum:abc123")
+        print(spec.spec_id)
+    """, n_devices=1, timeout=300)
+    assert out.strip() == spec.spec_id
+
+
+def test_spec_roundtrip_through_iterated_config():
+    spec = SmootherSpec(mode="sequential", linearization="slr",
+                        sigma_scheme="gauss_hermite", n_iter=4, tol=1e-7,
+                        lm_lambda=3.0, jitter=1e-8, model_id="m:1")
+    cfg = spec.iterated_config()
+    assert cfg.model_id == spec.spec_id      # full identity in the slot
+    assert cfg.method == "slr" and not cfg.parallel
+    back = SmootherSpec.from_iterated_config(cfg, model_id=spec.model_id)
+    assert back == spec
+
+
+def test_spec_signature_derived_from_spec_id():
+    spec = SmootherSpec(model_id="pendulum:abc123")
+    sig = spec_signature(spec, 10, 5)
+    assert sig == (spec.spec_id, "ekf", 16, 5)
+    # An iteration-knob change re-keys the bucket space (the legacy
+    # (model_id, method) signature could not see it).
+    other = dataclasses.replace(spec, n_iter=3)
+    assert spec_signature(other, 10, 5)[0] != sig[0]
+    assert spec_signature(other, 10, 5)[2:] == sig[2:]
+
+
+def test_scenario_default_spec_carries_model_id():
+    sc = get_scenario("coordinated_turn")
+    spec = sc.default_spec(n_iter=3)
+    assert spec.model_id == sc.model_id
+    assert spec.method == sc.default_method
+    assert spec.lm_lambda == sc.lm_lambda
+    assert spec.spec_id != sc.default_spec(n_iter=4).spec_id
+
+
+# ---------------------------------------------------------------------------
+# Legacy entry points: delegating shims, one warning per process
+# ---------------------------------------------------------------------------
+
+def test_legacy_entry_points_warn_once_and_match():
+    """Fresh-interpreter pin (warn-once is process-global state): each
+    legacy entry point fires exactly one DeprecationWarning naming
+    build_smoother on first use, none afterwards, and returns the same
+    output as the spec surface."""
+    check_snippet("""
+        import warnings
+        import jax, jax.numpy as jnp, numpy as np
+        jax.config.update("jax_enable_x64", True)
+        from repro.core import (SmootherSpec, build_smoother, ieks, ipls,
+                                iterated_smoother_batched,
+                                filter_smoother_batched,
+                                parallel_filter_smoother_batched,
+                                sqrt_parallel_filter_smoother_batched,
+                                IteratedConfig)
+        from repro.scenarios import get_scenario
+
+        sc = get_scenario("coordinated_turn")
+        model = sc.make_model(jnp.float64)
+        _, ys = sc.simulate(model, 8, jax.random.PRNGKey(0))
+        bys = jnp.stack([ys, ys])
+
+        def deprecations(ws):
+            return [w for w in ws
+                    if issubclass(w.category, DeprecationWarning)
+                    and "build_smoother" in str(w.message)]
+
+        def check(fn, *args, want=None, **kw):
+            with warnings.catch_warnings(record=True) as w1:
+                warnings.simplefilter("always")
+                got = fn(*args, **kw)
+            with warnings.catch_warnings(record=True) as w2:
+                warnings.simplefilter("always")
+                fn(*args, **kw)
+            assert len(deprecations(w1)) == 1, (fn.__name__, w1)
+            assert len(deprecations(w2)) == 0, (fn.__name__, w2)
+            if want is not None:
+                def gaussians(x):
+                    # A Gaussian is itself a (named) tuple; a smooth()
+                    # result is a plain tuple of Gaussians.
+                    return (x,) if hasattr(x, "_fields") else tuple(x)
+                for g, w in zip(gaussians(got), gaussians(want)):
+                    np.testing.assert_array_equal(
+                        np.asarray(g.mean), np.asarray(w.mean))
+            return got
+
+        spec = SmootherSpec(n_iter=2)
+        check(ieks, model, ys, n_iter=2,
+              want=build_smoother(spec).iterate(model, ys))
+        check(ipls, model, ys, n_iter=2,
+              want=build_smoother(
+                  spec, linearization="slr").iterate(model, ys))
+        cfg = IteratedConfig(n_iter=2)
+        check(iterated_smoother_batched, model, bys, cfg,
+              want=build_smoother(
+                  SmootherSpec.from_iterated_config(cfg)).iterate(
+                      model, bys))
+
+        import repro.core.linearization as L
+        lin = L.linearize_model_taylor_batched(
+            model, jnp.broadcast_to(model.m0, (2, 9, model.nx)))
+        sm = build_smoother(SmootherSpec())
+        check(parallel_filter_smoother_batched, lin, bys, model.m0,
+              model.P0, want=sm.smooth(lin, bys, model.m0, model.P0))
+        check(filter_smoother_batched, lin, bys, model.m0, model.P0,
+              want=build_smoother(mode="sequential").smooth(
+                  lin, bys, model.m0, model.P0))
+        check(sqrt_parallel_filter_smoother_batched, lin, bys, model.m0,
+              model.P0, want=build_smoother(form="sqrt").smooth(
+                  lin, bys, model.m0, model.P0))
+        print("OK")
+    """, n_devices=1, timeout=600)
+
+
+# ---------------------------------------------------------------------------
+# Public-API surface snapshot
+# ---------------------------------------------------------------------------
+
+def test_api_surface_snapshot_matches():
+    """`python -m repro.core.api --dump-surface` must equal the committed
+    snapshot — regenerate tests/api_surface.txt deliberately when the
+    surface changes (scripts/ci.sh runs the same diff)."""
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "api_surface.txt")
+    with open(path) as f:
+        committed = f.read()
+    assert dump_surface() == committed, (
+        "repro.core surface drifted from tests/api_surface.txt; "
+        "regenerate with: PYTHONPATH=src python -m repro.core.api "
+        "--dump-surface > tests/api_surface.txt")
+
+
+def test_smoother_repr_and_spec_access():
+    sm = build_smoother(n_iter=3)
+    assert isinstance(sm, Smoother)
+    assert sm.spec.n_iter == 3
+    assert sm.spec_id == sm.spec.spec_id
+    assert "SmootherSpec" in repr(sm)
