@@ -19,6 +19,18 @@ bucket is keyed by the spec's content hash (`spec_id`-derived
 signatures, `autobatch.spec_signature`). Tracks the per-tenant p95 and
 deadline-hit breakdown of mixed-model traffic.
 
+The `serve/chaos/...` rows run the same six-tenant bursty mix under the
+seeded fault injector (`repro.launch.chaos`): NaN request payloads +
+transient executor exceptions + stragglers at 0/2/10% headline rates,
+x {static, deadline} policies. Each row reports goodput (healthy AND
+on-time requests per second) and p95; the suite *asserts* the
+robustness acceptance contract — zero unhandled exceptions, an explicit
+diverged/retried/shed verdict for every corrupted request, healthy
+requests bit-identical to the fault-free run (static policy — the
+deterministic-composition gate), and goodput at the 2% rate within 15%
+of the fault-free baseline. ``python -m benchmarks.serve_bench --chaos``
+runs just this suite at quick sizes (the scripts/ci.sh chaos smoke).
+
 ``us_per_call`` for `serve/...` rows is the **p95 latency** in
 microseconds; the `serve/p95-win/...` rows derive the static/deadline
 p95 ratio — the acceptance metric tracked in `BENCH_serve.json`
@@ -32,6 +44,8 @@ import numpy as np
 
 REQUESTS, N, MAX_BATCH = 48, 64, 8
 QUICK_REQUESTS, QUICK_N, QUICK_MAX_BATCH = 10, 16, 4
+CHAOS_SEED = 17
+FAULT_PCTS = (0, 2, 10)
 
 
 def _settings(quick: bool):
@@ -55,23 +69,31 @@ TENANTS = ("coordinated_turn:standard", "bearings_only:standard",
            "stochastic_volatility:gold", "population:batch")
 
 
-def run_multitenant(requests, n, max_batch, rate, burst_size, emit=print):
-    """Mixed-scenario stream (all six registry scenarios) through one
-    shared `MultiTenantServer`, {static, deadline} flush policies over
-    an identical arrival trace."""
-    from repro.launch.autobatch import FlushPolicy, make_arrivals
+def _mt_setup(requests, n, max_batch):
+    """One shared six-tenant server + fleet (the warm jit cache every
+    policy/fault-rate run below must share for a fair comparison)."""
     from repro.launch.serve import (MultiTenantServer, SmootherServeConfig,
                                     TenantSpec, make_tenant_fleet)
 
     base = SmootherServeConfig(
         requests=requests, n=n, max_batch=max_batch, n_iter=3, tol=1e-6,
         max_wait_s=0.15)
-    specs = [TenantSpec.parse(s) for s in TENANTS]
-    server = MultiTenantServer(specs, base)
-
+    server = MultiTenantServer([TenantSpec.parse(s) for s in TENANTS],
+                               base)
     # The production driver's fleet-generation path, so bench and
     # service can't drift.
     fleet, _ = make_tenant_fleet(server, requests, n, seed=base.seed)
+    return base, server, fleet
+
+
+def run_multitenant(requests, n, max_batch, rate, burst_size, emit=print,
+                    setup=None):
+    """Mixed-scenario stream (all six registry scenarios) through one
+    shared `MultiTenantServer`, {static, deadline} flush policies over
+    an identical arrival trace."""
+    from repro.launch.autobatch import FlushPolicy, make_arrivals
+
+    base, server, fleet = setup or _mt_setup(requests, n, max_batch)
     arrivals = make_arrivals("bursty", requests, rate, burst_size,
                              seed=base.seed)
 
@@ -100,6 +122,82 @@ def run_multitenant(requests, n, max_batch, rate, burst_size, emit=print):
     rows.append((f"serve/mt/p95-win/bursty/R={requests}/n={n}",
                  p95["deadline"] * 1e6,
                  f"speedup={p95['static'] / p95['deadline']:.2f}x"))
+    for name, us, derived in rows:
+        emit(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+def run_chaos(requests, n, max_batch, rate, burst_size, emit=print,
+              setup=None):
+    """Fault-injection sweep over the six-tenant bursty mix: 0/2/10%
+    headline fault rates x {static, deadline} flush policies, one warm
+    shared server. Asserts the DESIGN.md §13 acceptance contract (any
+    violation raises, failing CI):
+
+      * the service completes — injected exceptions never escape;
+      * every NaN-corrupted request ends diverged/retried/shed;
+      * no request is handed a non-finite posterior;
+      * under the static policy (deterministic bucket composition),
+        every verdict-ok request is bit-identical to the fault-free run
+        and goodput at the 2% rate stays within 15% of fault-free.
+    """
+    from repro.launch.autobatch import FlushPolicy, make_arrivals
+    from repro.launch.chaos import ChaosConfig
+
+    base, server, fleet = setup or _mt_setup(requests, n, max_batch)
+    arrivals = make_arrivals("bursty", requests, rate, burst_size,
+                             seed=base.seed)
+
+    rows = []
+    for policy in ("static", "deadline"):
+        baseline = None
+        for pct in FAULT_PCTS:
+            chaos = (ChaosConfig.at_rate(pct / 100.0, seed=CHAOS_SEED)
+                     if pct else None)
+            stats = server.serve_stream(
+                fleet, arrivals, emit=lambda *_: None,
+                policy=FlushPolicy(kind=policy, max_batch=max_batch,
+                                   max_wait=base.max_wait_s,
+                                   slack=base.slack),
+                chaos=chaos)
+            verdicts = {r["req_id"]: r["verdict"]
+                        for r in stats["records"]}
+            for i, m in enumerate(stats["results"]):
+                if verdicts[i] != "shed":
+                    assert m is not None and np.isfinite(m).all(), \
+                        f"non-finite posterior reached request {i}"
+            if pct == 0:
+                baseline = stats
+            else:
+                corrupted = set(map(
+                    int, stats["chaos"]["corrupted_requests"]))
+                for idx in corrupted:
+                    assert verdicts[idx] in ("diverged", "retried",
+                                             "shed"), \
+                        (idx, verdicts[idx])
+                if policy == "static":
+                    for i, v in verdicts.items():
+                        if v == "ok":
+                            np.testing.assert_array_equal(
+                                baseline["results"][i],
+                                stats["results"][i],
+                                err_msg=f"healthy request {i} drifted "
+                                        f"under chaos")
+                    if pct == 2:
+                        assert (stats["goodput_rps"]
+                                >= 0.85 * baseline["goodput_rps"]), \
+                            (stats["goodput_rps"],
+                             baseline["goodput_rps"])
+            vd = stats["verdicts"]
+            vstr = "|".join(f"{k}:{vd[k]}" for k in sorted(vd))
+            rows.append((
+                f"serve/chaos/{policy}/fault={pct}pct/R={requests}/n={n}",
+                stats["latency_p95_s"] * 1e6,
+                f"goodput_rps={stats['goodput_rps']:.2f};"
+                f"p95_ms={stats['latency_p95_s'] * 1e3:.2f};"
+                f"deadline_hit={stats['deadline_hit_rate']:.2f};"
+                f"stragglers={stats['stragglers']};"
+                f"verdicts={vstr}"))
     for name, us, derived in rows:
         emit(f"{name},{us:.1f},{derived}")
     return rows
@@ -164,12 +262,42 @@ def run(requests=REQUESTS, n=N, max_batch=MAX_BATCH, quick=False,
         emit(f"{name},{us:.1f},{derived}")
 
     # Multi-tenant mix (quick shrinks the stream like the single-tenant
-    # runs; burst size spans tenants so buckets actually compete).
+    # runs; burst size spans tenants so buckets actually compete) and
+    # the chaos sweep, sharing one warm six-tenant server.
+    mt_rate = 12.0 if not quick else 8.0
+    setup = _mt_setup(requests, n, max_batch)
     rows += run_multitenant(
         requests=requests, n=n, max_batch=max_batch,
-        rate=12.0 if not quick else 8.0, burst_size=4, emit=emit)
+        rate=mt_rate, burst_size=4, emit=emit, setup=setup)
+    if not quick:
+        # Quick CI covers chaos via its dedicated smoke step
+        # (`python -m benchmarks.serve_bench --chaos` in scripts/ci.sh);
+        # the full run snapshots the serve/chaos/* rows too.
+        rows += run_chaos(
+            requests=requests, n=n, max_batch=max_batch,
+            rate=mt_rate, burst_size=4, emit=emit, setup=setup)
     return rows
 
 
+def main(argv=None):
+    import argparse
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true")
+    p.add_argument("--chaos", action="store_true",
+                   help="run ONLY the fault-injection acceptance sweep "
+                        "(quick sizes unless overridden) — the CI chaos "
+                        "smoke; exits non-zero on any contract violation")
+    args = p.parse_args(argv)
+    if args.chaos:
+        jax.config.update("jax_enable_x64", True)
+        run_chaos(requests=QUICK_REQUESTS, n=QUICK_N,
+                  max_batch=QUICK_MAX_BATCH, rate=8.0, burst_size=4)
+        print("chaos: OK (zero unhandled exceptions, healthy-request "
+              "parity, every fault verdicted)")
+    else:
+        run(quick=args.quick)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -7,9 +7,12 @@
 # linearizations, tiny n — the model-zoo gate), then a quick pass over
 # the perf-critical benchmark paths (paper fig1 + kernels + batched
 # smoother throughput + autobatch serving + scenario zoo), so a PR that
-# regresses a hot path fails here, not three PRs later. The full
-# benchmark suite exceeds the CI budget on CPU; --quick shrinks problem
-# sizes, and `timeout` enforces a hard ceiling.
+# regresses a hot path fails here, not three PRs later, and finally the
+# chaos smoke (PR 7): the fault-injection acceptance run — fixed seed,
+# zero unhandled exceptions, bit-identical healthy requests, every fault
+# explicitly verdicted — via `python -m benchmarks.serve_bench --chaos`.
+# The full benchmark suite exceeds the CI budget on CPU; --quick shrinks
+# problem sizes, and `timeout` enforces a hard ceiling.
 #
 #   scripts/ci.sh [pytest args...]
 set -euo pipefail
@@ -21,6 +24,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # oracle comparisons dominate); 3600 leaves ~45% headroom.
 TEST_BUDGET="${CI_TEST_BUDGET:-3600}"   # seconds
 BENCH_BUDGET="${CI_BENCH_BUDGET:-600}"  # seconds
+CHAOS_BUDGET="${CI_CHAOS_BUDGET:-600}"  # seconds
 
 echo "== public API surface (python -m repro.core.api --dump-surface) =="
 # The committed snapshot is the contract: a PR that grows or breaks the
@@ -40,4 +44,11 @@ BENCH_OUT="$(mktemp -d)/BENCH_ci_quick.json"
 timeout "${BENCH_BUDGET}" python -m benchmarks.run \
     --quick --only fig1,kernels,smoothers,serve,scenarios \
     --json "${BENCH_OUT}"
+
+echo "== chaos smoke (fault-injection acceptance, budget ${CHAOS_BUDGET}s) =="
+# Asserts internally: zero unhandled exceptions, healthy-request bit
+# parity vs the fault-free run, an explicit diverged/retried/shed
+# verdict for every corrupted request, and goodput within 15% of the
+# fault-free baseline at the 2% fault rate (static policy).
+timeout "${CHAOS_BUDGET}" python -m benchmarks.serve_bench --chaos
 echo "ci: OK (bench json: ${BENCH_OUT})"

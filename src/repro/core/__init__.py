@@ -12,7 +12,9 @@ Public API (DESIGN.md §Public API):
     (kalman_filter, rts_smoother, filter_smoother), parallel-in-time
     (parallel_filter/_smoother/_filter_smoother, elements + combines),
     square-root forms, iterated drivers (iterated_smoother,
-    IteratedConfig, IterationInfo), smoothed_log_likelihood
+    IteratedConfig, LaneStatus + lane codes — IterationInfo is its
+    legacy alias), smoothed_log_likelihood and the GN objective
+    (smoothing_cost/gn_cost) the adaptive-damping loop monitors
   * scan engine: associative_scan (batch_dims-aware),
     sharded_associative_scan, linear_recurrence_scan
   * deprecated shims (warn once, delegate to build_smoother): ieks,
@@ -43,7 +45,10 @@ from .parallel import (filtering_elements, smoothing_elements,
                        parallel_filter_smoother,
                        parallel_filter_batched, parallel_smoother_batched,
                        parallel_filter_smoother_batched)
-from .iterated import (IteratedConfig, IterationInfo, iterated_smoother,
+from .cost import gn_cost, smoothing_cost
+from .iterated import (IteratedConfig, IterationInfo, LaneStatus,
+                       LANE_CONVERGED, LANE_DIVERGED, LANE_MAX_ITERS,
+                       iterated_smoother,
                        iterated_smoother_batched, ieks, ipls,
                        initial_trajectory, initial_trajectory_batched,
                        smoothed_log_likelihood)
@@ -77,7 +82,9 @@ __all__ = [
     "parallel_filter", "parallel_smoother", "parallel_filter_smoother",
     "parallel_filter_batched", "parallel_smoother_batched",
     "parallel_filter_smoother_batched",
-    "IteratedConfig", "IterationInfo", "iterated_smoother",
+    "IteratedConfig", "IterationInfo", "LaneStatus",
+    "LANE_CONVERGED", "LANE_DIVERGED", "LANE_MAX_ITERS",
+    "gn_cost", "smoothing_cost", "iterated_smoother",
     "iterated_smoother_batched", "ieks", "ipls",
     "initial_trajectory", "initial_trajectory_batched",
     "smoothed_log_likelihood",

@@ -42,11 +42,12 @@ import hashlib
 import sys
 from typing import Optional
 
+from . import cost as _cost
 from . import iterated as _iterated
 from . import parallel as _parallel
 from . import sequential as _sequential
 from . import sqrt_parallel as _sqrt
-from .iterated import (COMBINE_IMPLS, FORMS, IteratedConfig,
+from .iterated import (COMBINE_IMPLS, DAMPINGS, FORMS, IteratedConfig,
                        validate_iteration_knobs)
 from .sigma_points import SCHEMES
 
@@ -104,6 +105,7 @@ class SmootherSpec:
     jitter: float = 0.0
     model_id: str = ""
     backend: str = "auto"
+    damping: str = "fixed"
 
     def __post_init__(self):
         _check_choice("mode", self.mode, MODES)
@@ -112,6 +114,7 @@ class SmootherSpec:
         _check_choice("sigma_scheme", self.sigma_scheme, tuple(SCHEMES))
         _check_choice("combine_impl", self.combine_impl, COMBINE_IMPLS)
         _check_choice("backend", self.backend, BACKENDS)
+        _check_choice("damping", self.damping, DAMPINGS)
         if self.form == "sqrt" and self.mode == "sequential":
             raise ValueError(
                 'form="sqrt" requires mode="parallel": no sequential '
@@ -147,9 +150,15 @@ class SmootherSpec:
         return self._spec_id
 
     def _compute_spec_id(self) -> str:
+        # ``damping`` joined the spec after v1 ids were already baked
+        # into caches and bench baselines: the default ("fixed", the
+        # exact pre-existing behavior) is excluded from the payload so
+        # every previously-constructible spec keeps its id, while any
+        # non-default damping re-keys (pinned in tests/core/test_api.py).
         payload = ";".join(
             f"{f.name}={getattr(self, f.name)!r}"
-            for f in dataclasses.fields(self))
+            for f in dataclasses.fields(self)
+            if not (f.name == "damping" and self.damping == "fixed"))
         digest = hashlib.sha1(
             f"{_SPEC_ID_VERSION};{payload}".encode()).hexdigest()[:12]
         prefix = self.model_id.split(":")[0] if self.model_id else "anon"
@@ -167,7 +176,7 @@ class SmootherSpec:
             sigma_scheme=cfg.sigma_scheme,
             n_iter=cfg.n_iter, tol=cfg.tol, lm_lambda=cfg.lm_lambda,
             combine_impl=cfg.combine_impl, jitter=cfg.jitter,
-            model_id=cfg.model_id)
+            model_id=cfg.model_id, damping=cfg.damping)
         kw.update(overrides)
         return cls(**kw)
 
@@ -184,7 +193,8 @@ class SmootherSpec:
             parallel=self.mode == "parallel",
             sigma_scheme=self.sigma_scheme, lm_lambda=self.lm_lambda,
             combine_impl=self.combine_impl, jitter=self.jitter,
-            tol=self.tol, model_id=self.spec_id, form=self.form)
+            tol=self.tol, model_id=self.spec_id, form=self.form,
+            damping=self.damping)
 
 
 class Smoother:
@@ -278,6 +288,15 @@ class Smoother:
         ``per_step=True``."""
         return _iterated.smoothed_log_likelihood(
             model, ys, traj, self.config, per_step=per_step)
+
+    def cost(self, model, ys, traj):
+        """Gauss-Newton smoothing cost of ``traj`` under the spec's
+        linearization family (`core.cost.gn_cost`) — the objective
+        :meth:`iterate` descends and the adaptive-damping driver
+        monitors; scalar for single trajectories, ``[B]`` batched."""
+        return _cost.gn_cost(model, ys, traj, method=self.spec.method,
+                             scheme=self.spec.sigma_scheme,
+                             jitter=self.spec.jitter)
 
 
 def build_smoother(spec: Optional[SmootherSpec] = None, **axes) -> Smoother:

@@ -30,6 +30,7 @@ from jax import lax
 
 from . import parallel, sequential, sqrt_parallel
 from ._deprecation import warn_deprecated
+from .cost import gn_cost
 from .linearization import (linearize_model_slr, linearize_model_slr_batched,
                             linearize_model_taylor,
                             linearize_model_taylor_batched)
@@ -43,6 +44,24 @@ jtm = jax.tree_util.tree_map
 #: here (the leaf module) so the two validators can never drift.
 FORMS = ("standard", "sqrt")
 COMBINE_IMPLS = ("auto", "jnp", "fused", "pallas")
+DAMPINGS = ("fixed", "adaptive")
+
+#: `LaneStatus.code` vocabulary (DESIGN.md §13): the per-lane verdict of
+#: the outer Gauss-Newton loop.
+LANE_CONVERGED = 0   # mean delta fell below tol (requires tol > 0)
+LANE_MAX_ITERS = 1   # iteration budget exhausted while still finite
+LANE_DIVERGED = 2    # non-finite iterate / cost, or damping cap exhausted
+
+#: Adaptive Levenberg-Marquardt schedule (classic nu = 10): accepted
+#: steps decay the damping, rejected steps raise it; a lane whose
+#: candidates stay non-finite for LM_MAX_BAD consecutive attempts — or
+#: whose damping hits the cap while still rejecting — is declared
+#: diverged and frozen at its last accepted iterate.
+LM_NU = 10.0
+LM_LAMBDA_INIT = 1.0
+LM_LAMBDA_MIN = 1e-9
+LM_LAMBDA_MAX = 1e8
+LM_MAX_BAD = 2
 
 
 def validate_iteration_knobs(n_iter: int, tol: float, lm_lambda: float,
@@ -70,6 +89,7 @@ class IteratedConfig:
     tol: float = 0.0                # early-stop mean-delta tol (0 = fixed M)
     model_id: str = ""              # scenario content hash (registry tenants)
     form: str = "standard"          # "standard" | "sqrt" (parallel only)
+    damping: str = "fixed"          # "fixed" | "adaptive" (per-lane LM)
 
     def __post_init__(self):
         """Eager validation: a bad axis name or iteration knob must fail
@@ -92,6 +112,9 @@ class IteratedConfig:
             raise ValueError(
                 f"unknown combine_impl {self.combine_impl!r}; "
                 f"available: {sorted(COMBINE_IMPLS)}")
+        if self.damping not in DAMPINGS:
+            raise ValueError(f"unknown damping {self.damping!r}; "
+                             f"available: {sorted(DAMPINGS)}")
         validate_iteration_knobs(self.n_iter, self.tol, self.lm_lambda,
                                  self.jitter)
 
@@ -117,25 +140,45 @@ class IteratedConfig:
         return (self, int(n_pad), int(b_pad), int(nx))
 
 
-class IterationInfo(NamedTuple):
-    """Diagnostics of the outer loop: passes executed and the last mean
-    update size (per lane for the batched driver)."""
+class LaneStatus(NamedTuple):
+    """Per-lane verdict of the outer loop (scalar fields for the single-
+    trajectory driver, ``[B]`` for the batched one).
+
+    ``code`` is one of `LANE_CONVERGED` / `LANE_MAX_ITERS` /
+    `LANE_DIVERGED`; ``iterations`` counts the passes the lane executed;
+    ``final_delta`` is the last accepted mean update; ``final_cost`` the
+    GN cost of the returned trajectory (`core.cost.smoothing_cost`;
+    zeros on fixed-damping paths unless ``return_info`` requested it).
+    The first two fields keep the legacy `IterationInfo` positions, so
+    ``info.iterations`` / ``info.final_delta`` consumers are unchanged.
+    """
 
     iterations: jnp.ndarray
     final_delta: jnp.ndarray
+    code: jnp.ndarray
+    final_cost: jnp.ndarray
 
 
-def _augment_lm(lin: LinearizedSSM, prev_means: jnp.ndarray, lam: float
+#: Legacy alias: `IterationInfo` grew lane-health fields and became
+#: `LaneStatus` — same leading fields, same pytree structure.
+IterationInfo = LaneStatus
+
+
+def _augment_lm(lin: LinearizedSSM, prev_means: jnp.ndarray, lam
                 ) -> Tuple[LinearizedSSM, jnp.ndarray]:
     """LM damping: pseudo-measurement ``x_k ~ N(prev_mean_k, (1/lam) I)``.
 
     Shape-polymorphic over leading axes (``[n, ...]`` or ``[B, n, ...]``):
     returns the augmented model and the pseudo measurements (the caller
-    concatenates the real ys with them along the last axis).
+    concatenates the real ys with them along the last axis). ``lam`` is a
+    scalar (fixed damping) or a per-lane ``[B]`` array (the adaptive
+    driver's independently-damped lanes).
     """
     ny, nx = lin.H.shape[-2:]
     lead = lin.H.shape[:-2]
     I = jnp.eye(nx, dtype=lin.H.dtype)
+    inv = 1.0 / jnp.asarray(lam, lin.Rp.dtype)
+    inv = inv.reshape(inv.shape + (1,) * (len(lead) + 2 - inv.ndim))
     H_aug = jnp.concatenate(
         [lin.H, jnp.broadcast_to(I, lead + (nx, nx))], axis=-2)
     d_aug = jnp.concatenate(
@@ -144,15 +187,15 @@ def _augment_lm(lin: LinearizedSSM, prev_means: jnp.ndarray, lam: float
     R_top = jnp.concatenate([lin.Rp, R_pad], axis=-1)
     R_bot = jnp.concatenate(
         [jnp.swapaxes(R_pad, -1, -2),
-         jnp.broadcast_to(I / lam, lead + (nx, nx))], axis=-1)
+         jnp.broadcast_to(I, lead + (nx, nx)) * inv], axis=-1)
     Rp_aug = jnp.concatenate([R_top, R_bot], axis=-2)
     return LinearizedSSM(F=lin.F, c=lin.c, Qp=lin.Qp,
                          H=H_aug, d=d_aug, Rp=Rp_aug), prev_means
 
 
 def _one_pass(model: StateSpaceModel, ys: jnp.ndarray, traj: Gaussian,
-              cfg: IteratedConfig, scheme: Optional[SigmaScheme]
-              ) -> Gaussian:
+              cfg: IteratedConfig, scheme: Optional[SigmaScheme],
+              lam=None) -> Gaussian:
     if cfg.method == "ekf":
         lin = linearize_model_taylor(model, traj.mean)
     elif cfg.method == "slr":
@@ -161,7 +204,10 @@ def _one_pass(model: StateSpaceModel, ys: jnp.ndarray, traj: Gaussian,
         raise ValueError(f"unknown method {cfg.method!r}")
 
     ys_eff = ys
-    if cfg.lm_lambda > 0.0:
+    if lam is not None:
+        lin, pseudo = _augment_lm(lin, traj.mean[1:], lam)
+        ys_eff = jnp.concatenate([ys, pseudo], axis=-1)
+    elif cfg.lm_lambda > 0.0:
         lin, pseudo = _augment_lm(lin, traj.mean[1:], cfg.lm_lambda)
         ys_eff = jnp.concatenate([ys, pseudo], axis=-1)
 
@@ -181,8 +227,11 @@ def _one_pass(model: StateSpaceModel, ys: jnp.ndarray, traj: Gaussian,
 
 def _one_pass_batched(model: StateSpaceModel, ys: jnp.ndarray,
                       traj: Gaussian, cfg: IteratedConfig,
-                      scheme: Optional[SigmaScheme]) -> Gaussian:
-    """One linearize->filter->smooth pass over ``[B, n]`` trajectories."""
+                      scheme: Optional[SigmaScheme], lam=None) -> Gaussian:
+    """One linearize->filter->smooth pass over ``[B, n]`` trajectories.
+
+    ``lam`` (per-lane ``[B]``) overrides ``cfg.lm_lambda`` — the adaptive
+    driver damps each lane independently."""
     if cfg.method == "ekf":
         lin = linearize_model_taylor_batched(model, traj.mean)
     elif cfg.method == "slr":
@@ -191,7 +240,10 @@ def _one_pass_batched(model: StateSpaceModel, ys: jnp.ndarray,
         raise ValueError(f"unknown method {cfg.method!r}")
 
     ys_eff = ys
-    if cfg.lm_lambda > 0.0:
+    if lam is not None:
+        lin, pseudo = _augment_lm(lin, traj.mean[:, 1:], lam)
+        ys_eff = jnp.concatenate([ys, pseudo], axis=-1)
+    elif cfg.lm_lambda > 0.0:
         lin, pseudo = _augment_lm(lin, traj.mean[:, 1:], cfg.lm_lambda)
         ys_eff = jnp.concatenate([ys, pseudo], axis=-1)
 
@@ -237,6 +289,123 @@ def _mean_delta(new: Gaussian, old: Gaussian, lane_axes) -> jnp.ndarray:
     return jnp.max(jnp.abs(new.mean - old.mean), axis=lane_axes)
 
 
+def _lane_axes(mean_ndim: int) -> tuple:
+    """Reduction axes collapsing one trajectory to its lane: ``(0, 1)``
+    for single ``[n+1, nx]`` means, ``(1, 2)`` for batched."""
+    return (0, 1) if mean_ndim == 2 else (1, 2)
+
+
+def _finite_lanes(traj: Gaussian) -> jnp.ndarray:
+    """Per-lane all-finite check over means and covariances (scalar bool
+    for single trajectories, ``[B]`` batched)."""
+    ma = _lane_axes(traj.mean.ndim)
+    return (jnp.all(jnp.isfinite(traj.mean), axis=ma)
+            & jnp.all(jnp.isfinite(traj.cov), axis=ma + (ma[-1] + 1,)))
+
+
+def _make_info(model, ys, traj, cfg, scheme, iterations, delta, converged,
+               want_cost: bool) -> LaneStatus:
+    """Final `LaneStatus` for the fixed-damping drivers: classify each
+    lane from its finiteness + convergence flag, and (only when the
+    caller asked for info) evaluate the GN cost of the returned
+    trajectory."""
+    finite = _finite_lanes(traj)
+    if want_cost:
+        cost = gn_cost(model, ys, traj, cfg.method, scheme, cfg.jitter)
+    else:
+        cost = jnp.zeros(finite.shape, traj.mean.dtype)
+    code = jnp.where(
+        finite,
+        jnp.where(converged, LANE_CONVERGED, LANE_MAX_ITERS),
+        LANE_DIVERGED).astype(jnp.int32)
+    return LaneStatus(iterations=iterations, final_delta=delta,
+                      code=code, final_cost=cost)
+
+
+def _adaptive_iterated(model: StateSpaceModel, ys: jnp.ndarray,
+                       cfg: IteratedConfig, scheme: Optional[SigmaScheme],
+                       traj0: Gaussian, return_history: bool,
+                       return_info: bool, batched: bool):
+    """Per-lane adaptive Levenberg-Marquardt outer loop (DESIGN.md §13).
+
+    Every iteration runs one damped pass for all lanes, evaluates the GN
+    cost of each candidate under its own linearization, and then — per
+    lane, independently — accepts the step (cost decreased: damping
+    decays by `LM_NU`), rejects it (cost rose: the lane keeps its
+    previous iterate and raises its damping), or declares divergence
+    (`LM_MAX_BAD` consecutive non-finite candidates, or the damping cap
+    reached while still rejecting) and freezes the lane at its last
+    accepted — hence finite — iterate. NaNs therefore never reach the
+    returned means/covariances: a lane that never accepts returns the
+    initial trajectory. ``cfg.lm_lambda > 0`` seeds the damping,
+    otherwise `LM_LAMBDA_INIT`.
+    """
+    M = cfg.n_iter
+    dtype = traj0.mean.dtype
+    lane_shape = traj0.mean.shape[:-2]
+    one_pass = _one_pass_batched if batched else _one_pass
+    axes = _lane_axes(traj0.mean.ndim)
+
+    lam0 = jnp.full(lane_shape,
+                    cfg.lm_lambda if cfg.lm_lambda > 0.0 else LM_LAMBDA_INIT,
+                    dtype)
+    cost0 = gn_cost(model, ys, traj0, cfg.method, scheme, cfg.jitter)
+    # A NaN initial cost (NaN observations) can never win a comparison:
+    # mark the lane diverged up front instead of burning its budget.
+    active0 = ~jnp.isnan(cost0)
+    code0 = jnp.where(active0, LANE_MAX_ITERS, LANE_DIVERGED
+                      ).astype(jnp.int32)
+    hist0 = (jnp.zeros((M,) + traj0.mean.shape, dtype)
+             if return_history else jnp.zeros((0,), dtype))
+
+    def cond(carry):
+        return (carry[-1] < M) & jnp.any(carry[3])
+
+    def body(carry):
+        traj, cost, lam, active, iters, code, bad, delta, hist, it = carry
+        cand = one_pass(model, ys, traj, cfg, scheme, lam=lam)
+        cand_cost = gn_cost(model, ys, cand, cfg.method, scheme, cfg.jitter)
+        cand_finite = _finite_lanes(cand) & jnp.isfinite(cand_cost)
+        accept = active & cand_finite & (cand_cost <= cost)
+        step_delta = _mean_delta(cand, traj, axes)
+        traj = _freeze_lanes(accept, cand, traj)
+        cost = jnp.where(accept, cand_cost, cost)
+        delta = jnp.where(accept, step_delta, delta)
+        lam = jnp.where(
+            accept, jnp.maximum(lam / LM_NU, LM_LAMBDA_MIN),
+            jnp.where(active, jnp.minimum(lam * LM_NU, LM_LAMBDA_MAX), lam))
+        bad = jnp.where(accept, 0, jnp.where(active, bad + 1, bad))
+        iters = iters + active.astype(jnp.int32)
+        if cfg.tol > 0.0:
+            conv = accept & (step_delta <= cfg.tol)
+        else:
+            conv = jnp.zeros_like(accept)
+        hopeless = active & ~accept & (
+            (~cand_finite & (bad >= LM_MAX_BAD)) | (lam >= LM_LAMBDA_MAX))
+        code = jnp.where(conv, LANE_CONVERGED,
+                         jnp.where(hopeless, LANE_DIVERGED, code)
+                         ).astype(jnp.int32)
+        active = active & ~conv & ~hopeless
+        if return_history:
+            hist = lax.dynamic_update_index_in_dim(hist, traj.mean, it, 0)
+        return traj, cost, lam, active, iters, code, bad, delta, hist, it + 1
+
+    carry0 = (traj0, cost0, lam0, active0,
+              jnp.zeros(lane_shape, jnp.int32), code0,
+              jnp.zeros(lane_shape, jnp.int32),
+              jnp.full(lane_shape, jnp.inf, dtype), hist0,
+              jnp.asarray(0, jnp.int32))
+    traj, cost, _, _, iters, code, _, delta, hist, it = lax.while_loop(
+        cond, body, carry0)
+    if return_history:
+        done = jnp.arange(M) < it
+        done = done.reshape((M,) + (1,) * traj.mean.ndim)
+        hist = jnp.where(done, hist, traj.mean[None])
+    info = LaneStatus(iterations=iters, final_delta=delta, code=code,
+                      final_cost=cost)
+    return _pack_result(traj, hist, info, return_history, return_info)
+
+
 def iterated_smoother(model: StateSpaceModel, ys: jnp.ndarray,
                       cfg: IteratedConfig = IteratedConfig(),
                       init: Optional[Gaussian] = None,
@@ -255,6 +424,10 @@ def iterated_smoother(model: StateSpaceModel, ys: jnp.ndarray,
               if cfg.method == "slr" else None)
     M = cfg.n_iter
 
+    if cfg.damping == "adaptive":
+        return _adaptive_iterated(model, ys, cfg, scheme, traj0,
+                                  return_history, return_info, batched=False)
+
     if cfg.tol <= 0.0:
         # Fixed-M path: identical to the paper's M=10 loop.
         def step(carry, _):
@@ -264,7 +437,9 @@ def iterated_smoother(model: StateSpaceModel, ys: jnp.ndarray,
             return smoothed, (out, delta)
 
         traj, (hist, deltas) = lax.scan(step, traj0, None, length=M)
-        info = IterationInfo(iterations=jnp.asarray(M), final_delta=deltas[-1])
+        info = _make_info(model, ys, traj, cfg, scheme,
+                          iterations=jnp.asarray(M), delta=deltas[-1],
+                          converged=False, want_cost=return_info)
         return _pack_result(traj, hist, info, return_history, return_info)
 
     hist0 = (jnp.zeros((M,) + traj0.mean.shape, traj0.mean.dtype)
@@ -288,7 +463,9 @@ def iterated_smoother(model: StateSpaceModel, ys: jnp.ndarray,
     if return_history:
         done = jnp.arange(M) < it
         hist = jnp.where(done[:, None, None], hist, traj.mean[None])
-    info = IterationInfo(iterations=it, final_delta=delta)
+    info = _make_info(model, ys, traj, cfg, scheme, iterations=it,
+                      delta=delta, converged=delta <= cfg.tol,
+                      want_cost=return_info)
     return _pack_result(traj, hist, info, return_history, return_info)
 
 
@@ -322,6 +499,10 @@ def _iterated_smoother_batched(model: StateSpaceModel, ys: jnp.ndarray,
               if cfg.method == "slr" else None)
     M = cfg.n_iter
 
+    if cfg.damping == "adaptive":
+        return _adaptive_iterated(model, ys, cfg, scheme, traj0,
+                                  return_history, return_info, batched=True)
+
     if cfg.tol <= 0.0:
         def step(carry, _):
             smoothed = _one_pass_batched(model, ys, carry, cfg, scheme)
@@ -330,8 +511,10 @@ def _iterated_smoother_batched(model: StateSpaceModel, ys: jnp.ndarray,
             return smoothed, (out, delta)
 
         traj, (hist, deltas) = lax.scan(step, traj0, None, length=M)
-        info = IterationInfo(iterations=jnp.full((B,), M, jnp.int32),
-                             final_delta=deltas[-1])
+        info = _make_info(model, ys, traj, cfg, scheme,
+                          iterations=jnp.full((B,), M, jnp.int32),
+                          delta=deltas[-1], converged=False,
+                          want_cost=return_info)
         return _pack_result(traj, hist, info, return_history, return_info)
 
     hist0 = (jnp.zeros((M,) + traj0.mean.shape, traj0.mean.dtype)
@@ -360,7 +543,9 @@ def _iterated_smoother_batched(model: StateSpaceModel, ys: jnp.ndarray,
     if return_history:
         done = jnp.arange(M) < it
         hist = jnp.where(done[:, None, None, None], hist, traj.mean[None])
-    info = IterationInfo(iterations=iters, final_delta=delta)
+    info = _make_info(model, ys, traj, cfg, scheme, iterations=iters,
+                      delta=delta, converged=delta <= cfg.tol,
+                      want_cost=return_info)
     return _pack_result(traj, hist, info, return_history, return_info)
 
 

@@ -60,6 +60,18 @@ FLUSH_DEADLINE = "deadline"
 FLUSH_MAX_WAIT = "max_wait"
 FLUSH_DRAIN = "drain"
 
+#: Per-request verdict vocabulary (DESIGN.md §13). Executors report
+#: ``ok``/``failed``/``retried``/``diverged`` per request; the driver
+#: turns ``failed`` into one bounded re-enqueue through the retry lane
+#: (or ``diverged`` when retries are exhausted/unavailable) and stamps
+#: ``shed`` on batch-class flushes dropped under overload. Every record
+#: a service returns carries exactly one of ok/retried/diverged/shed.
+VERDICT_OK = "ok"
+VERDICT_RETRIED = "retried"
+VERDICT_FAILED = "failed"
+VERDICT_DIVERGED = "diverged"
+VERDICT_SHED = "shed"
+
 # Launch-order rank when multiple buckets are due at one instant:
 # timer-triggered flushes (a deadline or starvation bound is firing)
 # beat fill-triggered ones; drain is the end-of-stream sweep.
@@ -130,7 +142,11 @@ class QueuedRequest:
     deadline, and priority. ``deadline`` is the *absolute* completion
     target in simulated seconds (``math.inf`` = none). ``tenant`` is a
     label for per-tenant accounting only; routing isolation comes from
-    ``model_id``/``method`` being part of the signature.
+    ``model_id``/``method`` being part of the signature. ``attempt``
+    counts retry hops: the driver re-enqueues a failed request at most
+    once (attempt 1, usually re-routed to a stronger-damped retry
+    spec), keeping the original arrival/deadline so latency and
+    deadline accounting stay end-to-end.
     """
 
     req_id: int
@@ -143,6 +159,7 @@ class QueuedRequest:
     method: str = "ekf"
     tenant: str = ""
     priority: int = SLO_CLASSES["standard"].priority
+    attempt: int = 0
 
     @property
     def signature(self) -> Signature:
@@ -160,12 +177,20 @@ class FlushPolicy:
     slack: float = 1.25       # safety factor on predicted compute time
     ema_alpha: float = 0.4    # compute-estimator smoothing
     default_compute: float = 0.0  # estimate before any observation
+    #: Overload shedding (DESIGN.md §13): a flush whose every request is
+    #: at ``shed_priority`` or lower urgency is dropped (verdict "shed")
+    #: instead of executed when the serial executor's backlog at flush
+    #: time exceeds ``shed_backlog_s`` seconds. ``inf`` disables.
+    shed_backlog_s: float = math.inf
+    shed_priority: int = SLO_CLASSES["batch"].priority
 
     def __post_init__(self):
         if self.kind not in ("deadline", "static"):
             raise ValueError(f"unknown flush policy kind {self.kind!r}")
         if self.max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        if self.shed_backlog_s < 0.0:
+            raise ValueError("shed_backlog_s must be >= 0")
 
     def pad_width(self, k: int) -> int:
         """Batch padding width for ``k`` requests (the shared module-level
@@ -338,16 +363,42 @@ def make_arrivals(kind: str, n_requests: int, rate: float,
 
 
 def run_service(requests: Sequence[QueuedRequest],
-                execute: Callable[[BucketFlush], float],
+                execute: Callable[[BucketFlush], object],
                 policy: FlushPolicy,
-                estimator: Optional[ComputeEstimator] = None) -> dict:
+                estimator: Optional[ComputeEstimator] = None,
+                *,
+                retry: Optional[Callable[[QueuedRequest],
+                                         Optional[QueuedRequest]]] = None,
+                watchdog=None) -> dict:
     """Drive the queue over a timestamped request stream.
 
-    ``execute(flush) -> seconds`` runs the padded bucket and returns its
-    measured wall time; the driver charges it to a single serial
-    executor (compute is real, the clock between events is simulated).
-    Returns per-request records plus launch log; summarize with
-    `summarize_service`.
+    ``execute(flush)`` runs the padded bucket and returns either its
+    measured wall seconds (every request succeeded) or a ``(seconds,
+    outcomes)`` pair where ``outcomes`` maps ``req_id`` to a verdict
+    (`VERDICT_OK`/`VERDICT_RETRIED`/`VERDICT_FAILED`/`VERDICT_DIVERGED`;
+    missing ids default to ok). The driver charges compute to a single
+    serial executor (compute is real, the clock between events is
+    simulated) and never lets a fault escape:
+
+      * ``failed`` requests on their first attempt are re-enqueued once
+        through ``retry(request) -> QueuedRequest`` (typically re-routed
+        to a stronger-damped spec; original arrival/deadline preserved);
+        without a retry hook — or on a repeat failure — the verdict is
+        ``diverged``;
+      * an exception raised by ``execute`` marks the whole flush failed
+        (same retry path) and is recorded on the launch, not raised;
+      * flushes whose most urgent request is at
+        ``policy.shed_priority`` or below are dropped with verdict
+        ``shed`` when the executor backlog exceeds
+        ``policy.shed_backlog_s`` at flush time (overload shedding);
+      * ``watchdog`` (a `repro.runtime.StepWatchdog`) observes each
+        launch's measured compute; straggler-flagged launches are marked
+        in the log and — like failed ones — kept out of the
+        `ComputeEstimator` EMA, so one outlier poisons neither the
+        anomaly baseline nor the flush-timing predictions.
+
+    Returns per-request records (each with a ``verdict``) plus launch
+    log; summarize with `summarize_service`.
     """
     queue = AutobatchQueue(policy, estimator)
     events = sorted(requests, key=lambda r: (r.arrival, r.req_id))
@@ -357,14 +408,55 @@ def run_service(requests: Sequence[QueuedRequest],
     records: List[dict] = []
     launches: List[dict] = []
 
+    def record(r: QueuedRequest, verdict: str, done: float, start: float,
+               dt: float, reason: str) -> None:
+        records.append({
+            "req_id": r.req_id, "arrival": r.arrival,
+            "latency_s": done - r.arrival,
+            "queue_wait_s": start - r.arrival,
+            "compute_s": dt, "reason": reason,
+            "deadline_met": (verdict != VERDICT_SHED
+                             and done <= r.deadline),
+            "tenant": r.tenant, "verdict": verdict,
+            "attempt": r.attempt,
+        })
+
     def run_flushes(flushes: List[BucketFlush]) -> None:
         nonlocal free_at
         for fl in flushes:
+            backlog = max(0.0, free_at - fl.at)
+            if (fl.priority >= policy.shed_priority
+                    and backlog > policy.shed_backlog_s):
+                launches.append({
+                    "signature": fl.signature, "b": len(fl.requests),
+                    "b_pad": fl.b_pad, "reason": fl.reason, "at": fl.at,
+                    "start": fl.at, "compute_s": 0.0,
+                    "priority": fl.priority, "shed": True,
+                    "req_ids": [r.req_id for r in fl.requests],
+                    "tenants": sorted({r.tenant for r in fl.requests}),
+                })
+                for r in fl.requests:
+                    record(r, VERDICT_SHED, fl.at, fl.at, 0.0, fl.reason)
+                continue
             start = max(fl.at, free_at)
-            dt = float(execute(fl))
-            queue.estimator.observe(fl.signature, fl.b_pad, dt)
+            error = None
+            try:
+                res = execute(fl)
+            except Exception as e:  # the fault boundary: never escapes
+                error = f"{type(e).__name__}: {e}"
+                res = (0.0, {r.req_id: VERDICT_FAILED
+                             for r in fl.requests})
+            if isinstance(res, tuple):
+                dt, outcomes = float(res[0]), dict(res[1])
+            else:
+                dt, outcomes = float(res), {}
             done = start + dt
             free_at = done
+            report = (watchdog.observe(step=len(launches), duration=dt)
+                      if watchdog is not None and error is None else None)
+            if error is None and report is None:
+                # Only clean, non-straggler launches feed the EMA.
+                queue.estimator.observe(fl.signature, fl.b_pad, dt)
             launches.append({
                 "signature": fl.signature, "b": len(fl.requests),
                 "b_pad": fl.b_pad, "reason": fl.reason, "at": fl.at,
@@ -372,16 +464,23 @@ def run_service(requests: Sequence[QueuedRequest],
                 "priority": fl.priority,
                 "req_ids": [r.req_id for r in fl.requests],
                 "tenants": sorted({r.tenant for r in fl.requests}),
+                **({"error": error} if error else {}),
+                **({"straggler": True} if report is not None else {}),
             })
             for r in fl.requests:
-                records.append({
-                    "req_id": r.req_id, "arrival": r.arrival,
-                    "latency_s": done - r.arrival,
-                    "queue_wait_s": start - r.arrival,
-                    "compute_s": dt, "reason": fl.reason,
-                    "deadline_met": done <= r.deadline,
-                    "tenant": r.tenant,
-                })
+                verdict = outcomes.get(r.req_id, VERDICT_OK)
+                if verdict == VERDICT_OK and r.attempt > 0:
+                    verdict = VERDICT_RETRIED
+                if verdict == VERDICT_FAILED:
+                    rq = (retry(r) if retry is not None
+                          and r.attempt == 0 else None)
+                    if rq is not None:
+                        # One bounded retry hop; the final record comes
+                        # from the retry flush.
+                        queue.submit(rq, done)
+                        continue
+                    verdict = VERDICT_DIVERGED
+                record(r, verdict, done, start, dt, fl.reason)
 
     while i < n or queue.pending():
         next_arr = events[i].arrival if i < n else math.inf
@@ -424,24 +523,44 @@ def summarize_service(service: dict) -> dict:
     When the request stream is multi-tenant (records carry more than one
     distinct ``tenant`` label), a ``per_tenant`` dict of sub-digests —
     per-tenant p50/p95 latency and deadline-hit rate — rides along with
-    the global numbers.
+    the global numbers. Latency percentiles cover completed requests
+    only (shed ones never ran); the health side reports per-verdict
+    counts, straggler-flagged launch count, and ``goodput_rps`` — the
+    rate of requests that both produced a healthy answer (verdict
+    ok/retried) and met their deadline, the robustness headline the
+    chaos benchmarks track (DESIGN.md §13).
     """
     records, launches = service["records"], service["launches"]
-    lat = np.asarray([r["latency_s"] for r in records])
+    completed = [r for r in records
+                 if r.get("verdict", VERDICT_OK) != VERDICT_SHED]
+    lat = np.asarray([r["latency_s"] for r in completed])
     arrivals = np.asarray([r["arrival"] for r in records])
-    done = arrivals + lat
-    span = float(done.max() - arrivals.min()) if len(lat) else 0.0
+    done = np.asarray([r["arrival"] + r["latency_s"] for r in records])
+    span = float(done.max() - arrivals.min()) if len(records) else 0.0
     reasons: Dict[str, int] = {}
     for l in launches:
         reasons[l["reason"]] = reasons.get(l["reason"], 0) + 1
-    occupancy = (float(np.mean([l["b"] / l["b_pad"] for l in launches]))
-                 if launches else 0.0)
+    verdicts: Dict[str, int] = {}
+    for r in records:
+        v = r.get("verdict", VERDICT_OK)
+        verdicts[v] = verdicts.get(v, 0) + 1
+    good = sum(1 for r in records
+               if r.get("verdict", VERDICT_OK) in (VERDICT_OK,
+                                                   VERDICT_RETRIED)
+               and r["deadline_met"])
+    executed = [l for l in launches if not l.get("shed")]
+    occupancy = (float(np.mean([l["b"] / l["b_pad"] for l in executed]))
+                 if executed else 0.0)
     out = {
-        **_latency_digest(records),
+        **_latency_digest(completed),
+        "requests": len(records),
         "launches": len(launches),
         "traj_per_s": len(records) / span if span > 0 else 0.0,
+        "goodput_rps": good / span if span > 0 else 0.0,
         "occupancy": occupancy,
         "flush_reasons": reasons,
+        "verdicts": verdicts,
+        "stragglers": sum(1 for l in launches if l.get("straggler")),
     }
     tenants = sorted({r.get("tenant", "") for r in records})
     if len(tenants) > 1:

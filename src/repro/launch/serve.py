@@ -50,10 +50,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.launch.autobatch import (SLO_CLASSES, ComputeEstimator,
+from repro.launch.autobatch import (SLO_CLASSES, VERDICT_DIVERGED,
+                                    VERDICT_FAILED, VERDICT_OK,
+                                    VERDICT_RETRIED, ComputeEstimator,
                                     FlushPolicy, QueuedRequest,
                                     make_arrivals, pad_width, run_service,
                                     spec_signature, summarize_service)
+from repro.launch.chaos import ChaosConfig, ChaosInjector, \
+    TransientComputeError
+from repro.runtime import StepWatchdog, with_retries
 
 
 # ---------------------------------------------------------------------------
@@ -150,6 +155,15 @@ class SmootherServeConfig:
     max_wait_s: float = 0.25  # queue-wait cap (starvation bound)
     slack: float = 1.25      # safety factor on predicted compute
     warm: bool = True        # pre-compile bucket signatures before serving
+    # Fault injection (streaming mode only; see launch/chaos.py).
+    chaos_rate: float = 0.0  # headline rate for ChaosConfig.at_rate
+    chaos_seed: int = 0
+
+    def chaos_config(self) -> Optional["ChaosConfig"]:
+        """The `ChaosConfig` for ``chaos_rate`` (None when disabled)."""
+        if self.chaos_rate <= 0:
+            return None
+        return ChaosConfig.at_rate(self.chaos_rate, seed=self.chaos_seed)
 
 
 def pad_requests(batch: List[np.ndarray], n_pad: int, b_pad: int,
@@ -217,21 +231,40 @@ class SmootherServer:
         self.spec = spec
         self._smoother = build_smoother(spec)
         self._icfg = self._smoother.config   # model_id == spec.spec_id
-
-        def run(ys, r_stack):
-            model_b = dataclasses.replace(self.model, R=r_stack)
-            traj, info = self._smoother.iterate(model_b, ys,
-                                                return_info=True)
-            # Per-step fit scores; padded steps are masked host-side
-            # (their inflated-R terms belong to no request).
-            ll_steps = self._smoother.log_likelihood(model_b, ys, traj,
-                                                     per_step=True)
-            return traj, info, ll_steps
-
-        self._run = jax.jit(run)
+        self._run = self._make_run(self._smoother)
+        # The bounded-retry lane (DESIGN.md §13): same spec with adaptive
+        # per-lane LM damping and a stronger initial lambda. Requests
+        # whose primary lane diverges are re-enqueued once here; the
+        # distinct spec_id routes them to their own buckets, so retry
+        # traffic never perturbs healthy buckets' composition.
+        retry_spec = dataclasses.replace(
+            spec, damping="adaptive",
+            lm_lambda=max(spec.lm_lambda * 10.0, 10.0))
+        self._retry_smoother = build_smoother(retry_spec)
+        self._retry_run = self._make_run(self._retry_smoother)
+        # Second-failure fallback: the sequential adaptive smoother, run
+        # per trajectory (no parallel-scan conditioning, most robust
+        # pass we have). Square-root factors only exist for the parallel
+        # combines, so the form drops to standard covariance here.
+        fallback_spec = dataclasses.replace(
+            retry_spec, mode="sequential", form="standard")
+        self._fallback_smoother = build_smoother(fallback_spec)
+        self._fallback_run = self._make_run(self._fallback_smoother)
         # Per-bucket executable signatures seen so far (compile-count
         # bookkeeping; jax.jit caches by shape, this mirrors its keys).
         self.signatures_seen = set()
+
+    def _make_run(self, smoother):
+        def run(ys, r_stack):
+            model_b = dataclasses.replace(self.model, R=r_stack)
+            traj, info = smoother.iterate(model_b, ys, return_info=True)
+            # Per-step fit scores; padded steps are masked host-side
+            # (their inflated-R terms belong to no request).
+            ll_steps = smoother.log_likelihood(model_b, ys, traj,
+                                               per_step=True)
+            return traj, info, ll_steps
+
+        return jax.jit(run)
 
     @property
     def icfg(self):
@@ -244,6 +277,13 @@ class SmootherServer:
         keys)."""
         return self._icfg.model_id
 
+    @property
+    def retry_model_id(self) -> str:
+        """Routing identity of the bounded-retry lane (adaptive-damping
+        spec); requests re-enqueued after a lane failure carry this id
+        so the queue buckets them separately from healthy traffic."""
+        return self._retry_smoother.config.model_id
+
     def queue_signature(self, n: int):
         """The autobatch bucket key for a request of length ``n`` against
         this server's spec — the single shared key-construction path
@@ -254,22 +294,37 @@ class SmootherServer:
                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         return pad_requests(batch, n_pad, b_pad, np.asarray(self.model.R))
 
-    def smooth_batch(self, batch: List[np.ndarray], n_pad: int, b_pad: int):
+    def smooth_batch(self, batch: List[np.ndarray], n_pad: int, b_pad: int,
+                     lane: str = "primary"):
         """Run one padded bucket launch; returns per-request trajectories
         (list of ``[n_i + 1, nx]`` means), the per-lane iteration info,
-        and per-request smoothed log-likelihood fit scores (real steps
-        only — padded-step terms are masked out)."""
+        per-request smoothed log-likelihood fit scores (real steps only —
+        padded-step terms are masked out), and per-request lane health
+        (True = finite posterior and not `LANE_DIVERGED`).
+
+        ``lane`` selects the executable: ``"primary"`` is the server's
+        spec, ``"retry"`` the adaptive-damping bounded-retry spec."""
+        from repro.core import LANE_DIVERGED
+
+        smoother_run, icfg = ((self._run, self._icfg)
+                              if lane == "primary"
+                              else (self._retry_run,
+                                    self._retry_smoother.config))
         self.signatures_seen.add(
-            self._icfg.cache_key(n_pad, b_pad, self.model.nx))
+            icfg.cache_key(n_pad, b_pad, self.model.nx))
         ys, rs = self._pad_bucket(batch, n_pad, b_pad)
-        traj, info, ll_steps = self._run(ys, rs)
+        traj, info, ll_steps = smoother_run(ys, rs)
         jax.block_until_ready(traj.mean)
         means = [np.asarray(traj.mean[i, :len(y) + 1])
                  for i, y in enumerate(batch)]
         ll_steps = np.asarray(ll_steps)
         logliks = [float(np.sum(ll_steps[i, :len(y)]))
                    for i, y in enumerate(batch)]
-        return means, info, logliks
+        codes = np.asarray(info.code)
+        health = [bool(codes[i] != LANE_DIVERGED)
+                  and bool(np.isfinite(m).all())
+                  for i, m in enumerate(means)]
+        return means, info, logliks, health
 
     def warmup(self, n_pads, b_pads, estimator: ComputeEstimator = None):
         """Pre-compile every (n_pad, b_pad) bucket signature and, when an
@@ -291,7 +346,7 @@ class SmootherServer:
                     self.smooth_batch(dummy, n_pad, b_pad)  # compile
                 if estimator is not None:
                     t0 = time.perf_counter()
-                    _, info, _ = self.smooth_batch(dummy, n_pad, b_pad)
+                    _, info, _, _ = self.smooth_batch(dummy, n_pad, b_pad)
                     dt = time.perf_counter() - t0
                     # The zero-measurement dummy converges early under
                     # tol>0; scale to the full pass budget so the seed
@@ -303,6 +358,86 @@ class SmootherServer:
                         dt *= self._icfg.n_iter / iters
                     estimator.observe(self.queue_signature(n_pad), b_pad,
                                       dt)
+
+    def warmup_retry(self, n_pads):
+        """Pre-compile the bounded-retry and fallback executables for the
+        given bucket lengths (narrow widths only — retry buckets hold the
+        rare failed requests, not full batches). Chaos runs warm these up
+        front so injected faults measure the retry *policy*, not compile
+        time; unwarmed widths still work, they just compile on first
+        use."""
+        ny = self.model.ny
+        for n_pad in sorted(set(n_pads)):
+            dummy = np.zeros((n_pad, ny))
+            for b_pad in (1, 2):
+                self.smooth_batch([dummy], n_pad, b_pad, lane="retry")
+            self._fallback_single(dummy, n_pad)
+
+    def retry_request(self, req: QueuedRequest) -> QueuedRequest:
+        """The re-enqueue hook handed to `autobatch.run_service`: rewrite
+        a failed request onto the bounded-retry lane (adaptive damping),
+        bumping ``attempt``. Arrival and deadline are preserved — a retry
+        does not buy the request more SLO budget."""
+        return dataclasses.replace(req, model_id=self.retry_model_id,
+                                   attempt=req.attempt + 1)
+
+    def _fallback_single(self, ys: np.ndarray, n_pad: int):
+        """Sequential adaptive smoothing of ONE trajectory — the
+        last-resort pass after the batched retry lane also failed.
+        Returns ``(mean, loglik, healthy)``; a still-diverged lane comes
+        back frozen at its last finite iterate with ``healthy=False``."""
+        from repro.core import LANE_DIVERGED
+
+        ys = np.asarray(ys)
+        ys_p, rs = self._pad_bucket([ys], n_pad, 1)
+        traj, info, ll_steps = self._fallback_run(ys_p, rs)
+        jax.block_until_ready(traj.mean)
+        mean = np.asarray(traj.mean[0, :len(ys) + 1])
+        ll = float(np.sum(np.asarray(ll_steps)[0, :len(ys)]))
+        code = int(np.asarray(info.code).reshape(-1)[0])
+        healthy = (code != LANE_DIVERGED) and bool(np.isfinite(mean).all())
+        return mean, ll, healthy
+
+    def run_flush(self, fl):
+        """Execute one queue flush with lane-health classification.
+
+        Routes the flush to the primary or retry executable by its
+        signature, classifies every request by its lane's `LaneStatus`,
+        and — for requests already on the retry lane that fail again —
+        runs the sequential per-trajectory fallback inline. Returns
+        ``(dt, outcomes, store, iters)``: measured wall seconds, the
+        per-request verdict dict `run_service` consumes, the results to
+        publish (``req_id -> (mean, loglik)``; a failed attempt-0 entry
+        holds the diverged lane's output and is overwritten when its
+        retry completes), and total iterations spent.
+        """
+        lane = ("retry" if fl.signature[0] == self.retry_model_id
+                else "primary")
+        batch = [r.payload for r in fl.requests]
+        n_pad = fl.signature[2]
+        t0 = time.perf_counter()
+        means, info, lls, health = self.smooth_batch(
+            batch, n_pad, fl.b_pad, lane=lane)
+        outcomes, store = {}, {}
+        for i, r in enumerate(fl.requests):
+            if health[i]:
+                outcomes[r.req_id] = (VERDICT_OK if r.attempt == 0
+                                      else VERDICT_RETRIED)
+                store[r.req_id] = (means[i], lls[i])
+            elif r.attempt == 0:
+                # Withhold the diverged posterior; run_service re-enqueues
+                # through retry_request (or degrades to DIVERGED if no
+                # retry hook is installed — publish the frozen iterate).
+                outcomes[r.req_id] = VERDICT_FAILED
+                store[r.req_id] = (means[i], lls[i])
+            else:
+                m, ll, ok = self._fallback_single(r.payload, n_pad)
+                outcomes[r.req_id] = (VERDICT_RETRIED if ok
+                                      else VERDICT_DIVERGED)
+                store[r.req_id] = (m, ll)
+        dt = time.perf_counter() - t0
+        iters = int(np.sum(np.asarray(info.iterations)[:len(batch)]))
+        return dt, outcomes, store, iters
 
     def serve_requests(self, requests: List[np.ndarray], emit=print) -> dict:
         """Bucket, pad, and smooth a full request list; returns stats."""
@@ -326,7 +461,7 @@ class SmootherServer:
                 # (autobatch.pad_width): one bounded executable-cache
                 # contract whether requests arrive one-shot or queued.
                 b_pad = pad_width(len(chunk), self.cfg.max_batch)
-                means, info, lls = self.smooth_batch(
+                means, info, lls, _ = self.smooth_batch(
                     [requests[i] for i in chunk], n_pad, b_pad)
                 for i, m, ll in zip(chunk, means, lls):
                     results[i] = m
@@ -351,7 +486,8 @@ class SmootherServer:
 
     def serve_stream(self, requests: List[np.ndarray],
                      arrivals: np.ndarray, emit=print,
-                     policy: Optional[FlushPolicy] = None) -> dict:
+                     policy: Optional[FlushPolicy] = None,
+                     chaos: Optional[ChaosConfig] = None) -> dict:
         """Serve a *timestamped* request stream through the autobatching
         queue (simulated arrival clock, measured bucket compute).
 
@@ -363,6 +499,12 @@ class SmootherServer:
         jitted executable at construction and is deliberately not
         re-read here. Returns the per-request results plus the latency
         digest of `autobatch.summarize_service`.
+
+        ``chaos`` injects the seeded fault mix of `launch.chaos` into
+        the stream: corrupted payloads go through the full
+        retry/fallback pipeline, transient executor exceptions are
+        absorbed in place by `with_retries`, and injected stragglers are
+        flagged by the `StepWatchdog` without polluting the compute EMA.
         """
         cfg = self.cfg
         if policy is None:
@@ -370,6 +512,10 @@ class SmootherServer:
                                  max_wait=cfg.max_wait_s, slack=cfg.slack)
         estimator = ComputeEstimator(policy.ema_alpha,
                                      policy.default_compute)
+        injector = None
+        if chaos is not None and chaos.active:
+            injector = ChaosInjector(chaos)
+            requests, _ = injector.corrupt_requests(requests)
         qreqs = [QueuedRequest(req_id=i, n=len(ys), nx=self.model.nx,
                                arrival=float(t),
                                deadline=float(t) + cfg.deadline_s,
@@ -383,26 +529,30 @@ class SmootherServer:
                       for k in range(1, cfg.max_batch + 1)}
             self.warmup(n_pads, b_pads,
                         estimator if policy.kind == "deadline" else None)
+            if injector is not None:
+                self.warmup_retry(n_pads)
 
         results: List[Optional[np.ndarray]] = [None] * len(requests)
         logliks: List[Optional[float]] = [None] * len(requests)
         iters_total = 0
 
         def execute(fl):
-            batch = [r.payload for r in fl.requests]
-            t0 = time.perf_counter()
-            means, info, lls = self.smooth_batch(batch, fl.signature[2],
-                                                 fl.b_pad)
-            dt = time.perf_counter() - t0
-            for r, m, ll in zip(fl.requests, means, lls):
-                results[r.req_id] = m
-                logliks[r.req_id] = ll
+            dt, outcomes, store, iters = self.run_flush(fl)
+            for rid, (m, ll) in store.items():
+                results[rid] = m
+                logliks[rid] = ll
             nonlocal iters_total
-            iters_total += int(np.sum(np.asarray(
-                info.iterations)[:len(batch)]))
-            return dt
+            iters_total += iters
+            return dt, outcomes
 
-        service = run_service(qreqs, execute, policy, estimator)
+        exec_fn = execute
+        if injector is not None:
+            exec_fn = with_retries(injector.wrap_execute(execute),
+                                   max_retries=1,
+                                   retry_on=(TransientComputeError,))
+        service = run_service(qreqs, exec_fn, policy, estimator,
+                              retry=self.retry_request,
+                              watchdog=StepWatchdog())
         stats = summarize_service(service)
         stats.update({
             "results": results,
@@ -410,6 +560,8 @@ class SmootherServer:
             "mean_iterations": iters_total / max(len(requests), 1),
             "compiles": len(self.signatures_seen),
             "records": service["records"],
+            "chaos": (injector.summary() if injector is not None
+                      else None),
         })
         emit(f"[serve/smoother/{policy.kind}] {stats['requests']} requests "
              f"in {stats['launches']} launches "
@@ -418,6 +570,11 @@ class SmootherServer:
              f"{stats['traj_per_s']:.1f} traj/s, "
              f"deadline hit {stats['deadline_hit_rate']:.0%}, "
              f"occupancy {stats['occupancy']:.2f})")
+        if injector is not None:
+            emit(f"[serve/chaos] injected {stats['chaos']['fault_kinds']}"
+                 f" + {stats['chaos']['exceptions']} transient exceptions"
+                 f" + {stats['chaos']['stragglers']} stragglers -> "
+                 f"verdicts {stats['verdicts']}")
         return stats
 
 
@@ -522,19 +679,34 @@ class MultiTenantServer:
                     f"{self._by_model[route].tenant!r} resolve to the same "
                     f"(model_id, method) route — deduplicate them upstream")
             self._by_model[route] = server
+            # Retry-lane route: re-enqueued requests carry the retry
+            # spec_id and must flush back to the owning server. The
+            # adaptive spec_id differs from every primary one, so this
+            # can't collide with the duplicate check above.
+            self._by_model[(server.retry_model_id, sspec.method)] = server
 
     def scenario_of(self, tenant: str):
         return self.specs[tenant]
 
+    def retry_request(self, req: QueuedRequest) -> QueuedRequest:
+        """Route a failed request onto its owning server's retry lane
+        (the request still carries the primary ``model_id`` at attempt
+        0, which is exactly the routing key)."""
+        return self._by_model[(req.model_id, req.method)] \
+            .retry_request(req)
+
     def serve_stream(self, requests: List[Tuple[str, np.ndarray]],
                      arrivals: np.ndarray, emit=print,
-                     policy: Optional[FlushPolicy] = None) -> dict:
+                     policy: Optional[FlushPolicy] = None,
+                     chaos: Optional[ChaosConfig] = None) -> dict:
         """Serve a timestamped *mixed* stream of ``(tenant, ys)`` pairs.
 
         Per-tenant warmup pre-compiles each tenant's bucket signatures
         and seeds the shared compute estimator, so streaming latency
         never pays compile time regardless of which tenant a bucket
-        belongs to.
+        belongs to. ``chaos`` injects the seeded fault mix of
+        `launch.chaos` across the whole mixed stream (see
+        `SmootherServer.serve_stream`).
         """
         cfg = self.cfg
         if policy is None:
@@ -542,6 +714,10 @@ class MultiTenantServer:
                                  max_wait=cfg.max_wait_s, slack=cfg.slack)
         estimator = ComputeEstimator(policy.ema_alpha,
                                      policy.default_compute)
+        injector = None
+        if chaos is not None and chaos.active:
+            injector = ChaosInjector(chaos)
+            requests, _ = injector.corrupt_requests(requests)
         qreqs = []
         for i, ((tenant, ys), t) in enumerate(zip(requests, arrivals)):
             spec = self.specs[tenant]
@@ -561,27 +737,32 @@ class MultiTenantServer:
                     server.warmup(
                         n_pads, b_pads,
                         estimator if policy.kind == "deadline" else None)
+                    if injector is not None:
+                        server.warmup_retry(n_pads)
 
         results: List[Optional[np.ndarray]] = [None] * len(requests)
         logliks: List[Optional[float]] = [None] * len(requests)
         iters_total = 0
 
         def execute(fl):
-            model_id, method, n_pad, _ = fl.signature
+            model_id, method, _, _ = fl.signature
             server = self._by_model[(model_id, method)]
-            batch = [r.payload for r in fl.requests]
-            t0 = time.perf_counter()
-            means, info, lls = server.smooth_batch(batch, n_pad, fl.b_pad)
-            dt = time.perf_counter() - t0
-            for r, m, ll in zip(fl.requests, means, lls):
-                results[r.req_id] = m
-                logliks[r.req_id] = ll
+            dt, outcomes, store, iters = server.run_flush(fl)
+            for rid, (m, ll) in store.items():
+                results[rid] = m
+                logliks[rid] = ll
             nonlocal iters_total
-            iters_total += int(np.sum(np.asarray(
-                info.iterations)[:len(batch)]))
-            return dt
+            iters_total += iters
+            return dt, outcomes
 
-        service = run_service(qreqs, execute, policy, estimator)
+        exec_fn = execute
+        if injector is not None:
+            exec_fn = with_retries(injector.wrap_execute(execute),
+                                   max_retries=1,
+                                   retry_on=(TransientComputeError,))
+        service = run_service(qreqs, exec_fn, policy, estimator,
+                              retry=self.retry_request,
+                              watchdog=StepWatchdog())
         stats = summarize_service(service)
         stats.update({
             "results": results,
@@ -591,6 +772,8 @@ class MultiTenantServer:
                             for s in self.servers.values()),
             "records": service["records"],
             "launch_log": service["launches"],
+            "chaos": (injector.summary() if injector is not None
+                      else None),
         })
         emit(f"[serve/smoother/mt/{policy.kind}] {stats['requests']} "
              f"requests, {len(self.servers)} tenants, "
@@ -598,6 +781,11 @@ class MultiTenantServer:
              f"(p95 {stats['latency_p95_s'] * 1e3:.1f}ms, "
              f"deadline hit {stats['deadline_hit_rate']:.0%}, "
              f"occupancy {stats['occupancy']:.2f})")
+        if injector is not None:
+            emit(f"[serve/chaos] injected {stats['chaos']['fault_kinds']}"
+                 f" + {stats['chaos']['exceptions']} transient exceptions"
+                 f" + {stats['chaos']['stragglers']} stragglers -> "
+                 f"verdicts {stats['verdicts']}")
         for tenant, digest in stats.get("per_tenant", {}).items():
             spec = self.specs[tenant]
             emit(f"  [tenant {tenant} ({spec.slo})] "
@@ -654,15 +842,22 @@ def serve_smoother_multitenant(cfg: SmootherServeConfig,
     else:
         arrivals = make_arrivals(cfg.arrival, cfg.requests, cfg.rate,
                                  cfg.burst_size, seed=cfg.seed)
-    stats = server.serve_stream(requests, arrivals, emit=emit)
+    stats = server.serve_stream(requests, arrivals, emit=emit,
+                                chaos=cfg.chaos_config())
 
     # Statistical sanity per tenant: full-state RMSE against the
     # simulated truth (position-only RMSE would be meaningless for the
     # scalar scenarios) and the mean smoothed log-likelihood fit score.
+    # Under chaos, shed requests have no result and corrupted ones track
+    # a corrupted truth — only healthy completions are scored.
     ll_by: Dict[str, List[float]] = defaultdict(list)
     rmse_by: Dict[str, List[float]] = defaultdict(list)
-    for (tenant, _), ll, mean, xs in zip(requests, stats["logliks"],
-                                         stats["results"], truths):
+    healthy = {r["req_id"] for r in stats["records"]
+               if r["verdict"] == VERDICT_OK}
+    for i, ((tenant, _), ll, mean, xs) in enumerate(
+            zip(requests, stats["logliks"], stats["results"], truths)):
+        if i not in healthy or mean is None:
+            continue
         ll_by[tenant].append(ll)
         rmse_by[tenant].append(
             float(np.sqrt(np.mean((mean[1:] - xs[1:]) ** 2))))
@@ -713,11 +908,18 @@ def serve_smoother(cfg: SmootherServeConfig, emit=print) -> dict:
     else:
         arrivals = make_arrivals(cfg.arrival, cfg.requests, cfg.rate,
                                  cfg.burst_size, seed=cfg.seed)
-        stats = server.serve_stream(requests, arrivals, emit=emit)
+        stats = server.serve_stream(requests, arrivals, emit=emit,
+                                    chaos=cfg.chaos_config())
 
     # Sanity: served estimates must actually track the simulated truth.
+    # Shed/corrupted requests are excluded — only "ok" completions (or
+    # everything on the chaos-free one-shot path) are scored.
+    healthy = {r["req_id"] for r in stats.get("records", [])
+               if r["verdict"] == VERDICT_OK}
     rmses = [float(np.sqrt(np.mean((m[1:, :2] - t[1:, :2]) ** 2)))
-             for m, t in zip(stats["results"], truths)]
+             for i, (m, t) in enumerate(zip(stats["results"], truths))
+             if m is not None and ("records" not in stats
+                                   or i in healthy)]
     stats["mean_rmse"] = float(np.mean(rmses)) if rmses else None
     if rmses:
         emit(f"[serve/smoother] mean position RMSE {stats['mean_rmse']:.4f}")
@@ -761,6 +963,11 @@ def main(argv=None):
                    help="smoother: comma-separated scenario[:slo[:weight]]"
                         " list (e.g. coordinated_turn,pendulum:gold) — "
                         "serves a mixed multi-tenant stream")
+    p.add_argument("--chaos", type=float, default=0.0, metavar="RATE",
+                   help="smoother: inject the seeded fault mix at this "
+                        "headline rate (NaN payloads + transient "
+                        "exceptions + stragglers; streaming mode only)")
+    p.add_argument("--chaos-seed", type=int, default=0)
     args = p.parse_args(argv)
     if args.workload == "smoother":
         cfg = SmootherServeConfig(
@@ -769,7 +976,11 @@ def main(argv=None):
             parallel=not args.sequential, f64=not args.f32,
             arrival=args.arrival, policy=args.policy, rate=args.rate,
             burst_size=args.burst_size, deadline_s=args.deadline,
-            max_wait_s=args.max_wait)
+            max_wait_s=args.max_wait, chaos_rate=args.chaos,
+            chaos_seed=args.chaos_seed)
+        if args.chaos > 0 and args.arrival == "none":
+            p.error("--chaos requires a streaming arrival process "
+                    "(--arrival poisson|bursty)")
         if args.tenants:
             serve_smoother_multitenant(
                 cfg, [TenantSpec.parse(s)

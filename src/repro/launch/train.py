@@ -27,8 +27,8 @@ from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import (AdamWConfig, TrainState, make_train_step)
 from repro.models import init_model
 from repro.optim import init_adamw
-from repro.runtime import (PreemptionHandler, StepWatchdog, reshard_state,
-                           shardings_for)
+from repro.runtime import PreemptionHandler, StepWatchdog
+from repro.runtime.elastic import reshard_state, shardings_for
 
 
 @dataclasses.dataclass

@@ -1,6 +1,14 @@
+"""Fault-tolerance runtime surface.
+
+`repro.runtime` exports exactly the names the serving stack consumes
+(`launch/autobatch.py`, `launch/serve.py`): the straggler watchdog, the
+bounded-retry wrapper, and preemption handling. Elastic resharding
+utilities live in `repro.runtime.elastic` and are imported from there by
+their (training/checkpoint) users — they are deliberately NOT re-exported
+here, so this package's surface tracks what the service actually uses.
+"""
 from repro.runtime.fault import (PreemptionHandler, StepWatchdog,
                                  StragglerReport, with_retries)
-from repro.runtime.elastic import replan_data, reshard_state, shardings_for
 
 __all__ = ["PreemptionHandler", "StepWatchdog", "StragglerReport",
-           "with_retries", "replan_data", "reshard_state", "shardings_for"]
+           "with_retries"]

@@ -56,6 +56,7 @@ jtm = jax.tree_util.tree_map
     dict(lm_lambda=-1.0),
     dict(jitter=-1e-9),
     dict(mode="sequential", form="sqrt"),
+    dict(damping="trust_region"),
 ])
 def test_spec_validation_rejects(bad):
     with pytest.raises(ValueError):
@@ -82,6 +83,7 @@ def test_spec_validation_messages_are_actionable():
     dict(n_iter=0),
     dict(tol=-0.5),
     dict(lm_lambda=-1.0),
+    dict(damping="bogus"),
 ])
 def test_iterated_config_validation_rejects(bad):
     with pytest.raises(ValueError):
@@ -197,7 +199,8 @@ def test_spec_id_deterministic_and_field_sensitive():
     changed = dict(mode="sequential", form="sqrt", linearization="slr",
                    sigma_scheme="unscented", n_iter=7, tol=1e-5,
                    lm_lambda=2.0, combine_impl="fused", jitter=1e-9,
-                   model_id="pendulum:def456", backend="pallas")
+                   model_id="pendulum:def456", backend="pallas",
+                   damping="adaptive")
     ids = {spec.spec_id}
     for field, value in changed.items():
         if field == "form":
@@ -208,6 +211,26 @@ def test_spec_id_deterministic_and_field_sensitive():
         ids.add(other.spec_id)
     # ... and every variant is distinct from every other.
     assert len(ids) == len(changed) + 1
+
+
+def test_spec_id_backward_compatible_for_fixed_damping():
+    """Pinned literals from before the ``damping`` field existed: the
+    default ``damping="fixed"`` is excluded from the hash payload, so
+    every pre-existing spec_id (bucket signatures, jit-cache keys,
+    BENCH_serve.json rows) survives the field's addition unchanged.
+    Only ``damping="adaptive"`` re-keys."""
+    assert SmootherSpec().spec_id == "anon/8fbe939935b7"
+    assert SmootherSpec(model_id="pendulum:abc123").spec_id == \
+        "pendulum/c1512ecc03c7"
+    assert SmootherSpec(linearization="slr", sigma_scheme="unscented",
+                        n_iter=7, tol=1e-5, lm_lambda=0.5,
+                        model_id="pendulum:abc123").spec_id == \
+        "pendulum/876f7e960a2e"
+    base = SmootherSpec(model_id="pendulum:abc123")
+    assert dataclasses.replace(base, damping="fixed").spec_id == \
+        base.spec_id
+    assert dataclasses.replace(base, damping="adaptive").spec_id != \
+        base.spec_id
 
 
 def test_spec_id_stable_across_processes():

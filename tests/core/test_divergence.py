@@ -1,0 +1,200 @@
+"""Adversarial robustness matrix for the iterated smoothers (DESIGN.md
+§13): huge measurement outliers, near-singular R, absurd priors, and NaN
+observations.
+
+Contract under test:
+  * fixed-damping GN diverges where expected (NaN observations poison
+    the pass) and reports it via `LaneStatus.code == LANE_DIVERGED`;
+  * adaptive per-lane LM damping either recovers or freezes the lane at
+    its last finite iterate — the returned mean/cov NEVER contain NaN,
+    and the lane is explicitly marked diverged;
+  * the adaptive batched driver matches the per-trajectory driver on
+    benign inputs (same tolerance the fixed-damping parity tests pin —
+    batched kernel twins are separately compiled programs, so cross-
+    driver bit-equality is not a property even for fixed damping);
+  * at a FIXED batch width, lanes are bit-exactly independent: changing
+    one lane's data — even to all-NaN — cannot perturb another lane by
+    a single bit. This is the property the serving layer's chaos parity
+    gate stands on (healthy co-batched requests are unaffected by a
+    corrupted neighbour).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (LANE_CONVERGED, LANE_DIVERGED, LANE_MAX_ITERS,
+                        IteratedConfig, gn_cost, initial_trajectory,
+                        iterated_smoother, iterated_smoother_batched)
+from repro.data import CoordinatedTurnConfig, make_coordinated_turn_model, \
+    simulate_trajectory
+
+N_STEPS = 40
+M_ITERS = 8
+
+
+@pytest.fixture(scope="module")
+def ct_problem():
+    model = make_coordinated_turn_model(CoordinatedTurnConfig())
+    xs, ys = simulate_trajectory(model, N_STEPS, jax.random.PRNGKey(7))
+    return model, np.asarray(xs), np.asarray(ys)
+
+
+def _cfg(damping, **kw):
+    kw.setdefault("method", "ekf")
+    kw.setdefault("n_iter", M_ITERS)
+    kw.setdefault("parallel", True)
+    return IteratedConfig(damping=damping, **kw)
+
+
+def adversarial_inputs(model, ys):
+    """The adversarial matrix: (name, model, ys) cases."""
+    nan_ys = ys.copy()
+    nan_ys[N_STEPS // 2] = np.nan
+    sigma = float(np.asarray(model.R)[0, 0])
+    near_singular_R = sigma * np.array([[1.0, 1.0 - 1e-13],
+                                        [1.0 - 1e-13, 1.0]])
+    import dataclasses
+    return [
+        ("huge_outliers", model, ys * 1e6),
+        ("near_singular_R",
+         dataclasses.replace(model, R=jnp.asarray(near_singular_R)), ys),
+        ("absurd_prior",
+         dataclasses.replace(model,
+                             m0=model.m0 + 1e6,
+                             P0=model.P0 * 1e-12), ys),
+        ("nan_obs", model, nan_ys),
+    ]
+
+
+@pytest.mark.parametrize("case", range(4),
+                         ids=["huge_outliers", "near_singular_R",
+                              "absurd_prior", "nan_obs"])
+def test_adaptive_never_returns_nan(ct_problem, case):
+    """Whatever the input, the adaptive driver's returned mean/cov are
+    finite and the lane code is a defined value."""
+    model, _, ys = ct_problem
+    name, mdl, bad_ys = adversarial_inputs(model, ys)[case]
+    traj, info = iterated_smoother(mdl, jnp.asarray(bad_ys),
+                                   _cfg("adaptive"), return_info=True)
+    assert bool(jnp.all(jnp.isfinite(traj.mean))), name
+    assert bool(jnp.all(jnp.isfinite(traj.cov))), name
+    assert int(info.code) in (LANE_CONVERGED, LANE_MAX_ITERS,
+                              LANE_DIVERGED)
+
+
+def test_fixed_diverges_on_nan_adaptive_reports_cleanly(ct_problem):
+    """NaN observations: fixed GN must poison its output (and say so via
+    LANE_DIVERGED); adaptive must freeze at the (finite) initial
+    trajectory with an explicit diverged verdict and zero accepted
+    iterations."""
+    model, _, ys = ct_problem
+    nan_ys = ys.copy()
+    nan_ys[N_STEPS // 2] = np.nan
+    fixed, finfo = iterated_smoother(model, jnp.asarray(nan_ys),
+                                     _cfg("fixed", lm_lambda=1.0),
+                                     return_info=True)
+    assert not bool(jnp.all(jnp.isfinite(fixed.mean)))
+    assert int(finfo.code) == LANE_DIVERGED
+    adap, ainfo = iterated_smoother(model, jnp.asarray(nan_ys),
+                                    _cfg("adaptive"), return_info=True)
+    assert bool(jnp.all(jnp.isfinite(adap.mean)))
+    assert int(ainfo.code) == LANE_DIVERGED
+    assert int(ainfo.iterations) == 0
+
+
+def test_adaptive_cost_never_increases(ct_problem):
+    """The accept/reject rule only ever keeps non-increasing GN cost, so
+    the final iterate can't be worse than the initial trajectory."""
+    model, _, ys = ct_problem
+    ys = jnp.asarray(ys)
+    traj0 = initial_trajectory(model, len(ys))
+    traj, info = iterated_smoother(model, ys, _cfg("adaptive"),
+                                   return_info=True)
+    c0 = float(gn_cost(model, ys, traj0))
+    c1 = float(gn_cost(model, ys, traj))
+    assert np.isfinite(c1)
+    assert c1 <= c0 + 1e-9
+    assert float(info.final_cost) == pytest.approx(c1, rel=1e-6)
+
+
+def test_adaptive_converges_on_benign_input(ct_problem):
+    """On clean data the adaptive driver must actually smooth (match the
+    fixed-damping estimate, not just stay finite)."""
+    model, xs, ys = ct_problem
+    ys = jnp.asarray(ys)
+    adap = iterated_smoother(model, ys, _cfg("adaptive", tol=1e-8,
+                                             n_iter=20))
+    fixed = iterated_smoother(model, ys, _cfg("fixed", tol=1e-8,
+                                              n_iter=20))
+    np.testing.assert_allclose(adap.mean, fixed.mean, rtol=1e-4,
+                               atol=1e-6)
+
+
+def test_adaptive_batched_matches_single_on_benign(ct_problem):
+    """Batched adaptive == per-trajectory adaptive on benign inputs, to
+    the same tolerance the fixed-damping parity suite pins.
+
+    Depth is kept before the convergence plateau: past it, candidate
+    costs tie with the incumbent at float noise, so the accept bit (and
+    with it the lambda schedule) may legitimately differ between the two
+    separately compiled drivers."""
+    model, _, ys0 = ct_problem
+    _, ys1 = simulate_trajectory(model, N_STEPS, jax.random.PRNGKey(8))
+    ys_b = jnp.stack([jnp.asarray(ys0), jnp.asarray(ys1)])
+    cfg = _cfg("adaptive", n_iter=3)
+    batched, binfo = iterated_smoother_batched(model, ys_b, cfg,
+                                               return_info=True)
+    for i in range(2):
+        single, sinfo = iterated_smoother(model, ys_b[i], cfg,
+                                          return_info=True)
+        np.testing.assert_allclose(batched.mean[i], single.mean,
+                                   rtol=1e-6, atol=1e-8)
+        np.testing.assert_allclose(batched.cov[i], single.cov,
+                                   rtol=1e-6, atol=1e-8)
+        assert int(np.asarray(binfo.code)[i]) == int(sinfo.code)
+
+
+@pytest.mark.parametrize("damping", ["fixed", "adaptive"])
+def test_colane_independence_is_bit_exact(ct_problem, damping):
+    """At a fixed batch width, a lane's output is a function of its own
+    data ONLY: replacing a co-lane's measurements with NaN must not
+    change the other lanes by a single bit (the chaos-parity property
+    the serving layer asserts end-to-end)."""
+    model, _, ys0 = ct_problem
+    _, ys1 = simulate_trajectory(model, N_STEPS, jax.random.PRNGKey(9))
+    _, ys2 = simulate_trajectory(model, N_STEPS, jax.random.PRNGKey(10))
+    nan_ys = np.full_like(np.asarray(ys2), np.nan)
+    cfg = _cfg(damping, lm_lambda=1.0)
+    clean = iterated_smoother_batched(
+        model, jnp.stack([jnp.asarray(ys0), jnp.asarray(ys1),
+                          jnp.asarray(ys2)]), cfg)
+    dirty, info = iterated_smoother_batched(
+        model, jnp.stack([jnp.asarray(ys0), jnp.asarray(ys1),
+                          jnp.asarray(nan_ys)]), cfg,
+        return_info=True)
+    for i in range(2):
+        np.testing.assert_array_equal(np.asarray(clean.mean[i]),
+                                      np.asarray(dirty.mean[i]))
+        np.testing.assert_array_equal(np.asarray(clean.cov[i]),
+                                      np.asarray(dirty.cov[i]))
+    assert int(np.asarray(info.code)[2]) == LANE_DIVERGED
+    if damping == "adaptive":   # frozen lane, not poisoned output
+        assert bool(np.isfinite(np.asarray(dirty.mean[2])).all())
+
+
+def test_lane_status_batched_mixed_health(ct_problem):
+    """One batched launch with benign + NaN lanes: per-lane codes split
+    accordingly and healthy lanes converge under tol."""
+    model, _, ys = ct_problem
+    nan_ys = np.asarray(ys).copy()
+    nan_ys[0] = np.nan
+    ys_b = jnp.stack([jnp.asarray(ys), jnp.asarray(nan_ys)])
+    traj, info = iterated_smoother_batched(
+        model, ys_b, _cfg("adaptive", tol=1e-10, n_iter=25),
+        return_info=True)
+    codes = np.asarray(info.code)
+    assert codes[1] == LANE_DIVERGED
+    assert codes[0] in (LANE_CONVERGED, LANE_MAX_ITERS)
+    assert bool(np.isfinite(np.asarray(traj.mean)).all())
+    assert np.asarray(info.iterations)[1] == 0

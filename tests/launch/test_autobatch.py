@@ -7,17 +7,22 @@ plus the no-starvation guarantee for rare signatures, the multi-tenant
 ordering, and the discrete-event driver's bookkeeping with a stub
 executor.
 """
+import dataclasses
 import math
 
 import pytest
 
-from repro.launch.autobatch import (SLO_CLASSES, AutobatchQueue,
+from repro.launch.autobatch import (SLO_CLASSES, VERDICT_DIVERGED,
+                                    VERDICT_FAILED, VERDICT_OK,
+                                    VERDICT_RETRIED, VERDICT_SHED,
+                                    AutobatchQueue,
                                     ComputeEstimator, FlushPolicy,
                                     QueuedRequest,
                                     FLUSH_DEADLINE, FLUSH_DRAIN, FLUSH_FULL,
                                     FLUSH_MAX_WAIT, bucket_signature,
                                     make_arrivals, next_pow2, pad_width,
                                     run_service, summarize_service)
+from repro.runtime import StepWatchdog
 
 
 def req(i, n=10, nx=5, arrival=0.0, deadline=math.inf, model_id="",
@@ -270,6 +275,146 @@ def test_run_service_multi_tenant_records_and_summary():
     assert set(summary["per_tenant"]) == {"a", "b"}
     assert summary["per_tenant"]["b"]["requests"] == 2
     assert summary["per_tenant"]["a"]["latency_p95_s"] > 0.0
+
+
+def retry_to(model_id):
+    """A retry hook that reroutes a failed request to ``model_id``."""
+    return lambda r: dataclasses.replace(r, model_id=model_id,
+                                         attempt=r.attempt + 1)
+
+
+def test_run_service_retry_reroutes_failed_once():
+    """A failed attempt-0 request is re-enqueued through the retry hook
+    (rerouted bucket), and its single final record says 'retried' with
+    end-to-end latency from the ORIGINAL arrival."""
+    pol = FlushPolicy(kind="static", max_batch=1)
+
+    def execute(fl):
+        if fl.signature[0] == "m":
+            return 0.2, {r.req_id: VERDICT_FAILED for r in fl.requests}
+        return 0.3, {}
+
+    service = run_service([req(0, model_id="m", arrival=0.0)], execute,
+                          pol, retry=retry_to("m#retry"))
+    assert len(service["records"]) == 1
+    rec = service["records"][0]
+    assert rec["verdict"] == VERDICT_RETRIED
+    assert rec["attempt"] == 1
+    assert rec["latency_s"] == pytest.approx(0.5)   # 0.2 + 0.3, arrival 0
+    sigs = [l["signature"][0] for l in service["launches"]]
+    assert sigs == ["m", "m#retry"]
+
+
+def test_run_service_failed_without_retry_hook_is_diverged():
+    pol = FlushPolicy(kind="static", max_batch=1)
+    service = run_service(
+        [req(0, arrival=0.0)],
+        lambda fl: (0.1, {0: VERDICT_FAILED}), pol)
+    assert service["records"][0]["verdict"] == VERDICT_DIVERGED
+    assert len(service["launches"]) == 1
+
+
+def test_run_service_retry_is_bounded_to_one_hop():
+    """A request that fails on its retry attempt is NOT re-enqueued
+    again: the verdict degrades to diverged after exactly two launches."""
+    pol = FlushPolicy(kind="static", max_batch=1)
+    service = run_service(
+        [req(0, model_id="m", arrival=0.0)],
+        lambda fl: (0.1, {0: VERDICT_FAILED}), pol,
+        retry=retry_to("m#retry"))
+    assert len(service["launches"]) == 2
+    rec = service["records"][0]
+    assert rec["verdict"] == VERDICT_DIVERGED and rec["attempt"] == 1
+
+
+def test_run_service_exception_is_contained_and_logged():
+    """An exception from the executor never escapes: the launch carries
+    the error string and every request in the flush fails (diverged here
+    — no retry hook installed)."""
+    pol = FlushPolicy(kind="static", max_batch=2)
+
+    def execute(fl):
+        raise RuntimeError("injected")
+
+    service = run_service([req(0, arrival=0.0), req(1, arrival=0.0)],
+                          execute, pol)
+    assert all(r["verdict"] == VERDICT_DIVERGED
+               for r in service["records"])
+    assert "RuntimeError" in service["launches"][0]["error"]
+    summary = summarize_service(service)
+    assert summary["verdicts"] == {VERDICT_DIVERGED: 2}
+
+
+def test_run_service_sheds_batch_class_under_backlog():
+    """With the executor deep in backlog, a batch-priority flush is
+    dropped (verdict shed, never executed); urgent classes still run."""
+    pol = FlushPolicy(kind="deadline", max_batch=1, max_wait=0.1,
+                      shed_backlog_s=0.5,
+                      shed_priority=SLO_CLASSES["batch"].priority)
+    gold = SLO_CLASSES["gold"].priority
+    batch = SLO_CLASSES["batch"].priority
+    reqs = [req(0, arrival=0.0, priority=gold),           # runs 5s
+            req(1, n=100, arrival=0.2, priority=batch),   # backlog -> shed
+            req(2, n=200, arrival=0.2, priority=gold)]    # urgent -> runs
+    service = run_service(reqs, lambda fl: 5.0, pol)
+    recs = {r["req_id"]: r for r in service["records"]}
+    assert recs[0]["verdict"] == VERDICT_OK
+    assert recs[1]["verdict"] == VERDICT_SHED
+    assert not recs[1]["deadline_met"]
+    assert recs[2]["verdict"] == VERDICT_OK
+    shed_launches = [l for l in service["launches"] if l.get("shed")]
+    assert len(shed_launches) == 1
+    assert shed_launches[0]["compute_s"] == 0.0
+    summary = summarize_service(service)
+    assert summary["verdicts"][VERDICT_SHED] == 1
+    # Latency percentiles cover completed requests only.
+    assert summary["requests"] == 3
+
+
+def test_estimator_not_poisoned_by_failures_or_stragglers():
+    """Satellite contract: only clean, non-straggler launches feed the
+    compute EMA (a failed flush's dt=0 or a straggler's inflated dt
+    would corrupt every subsequent flush-timing prediction)."""
+    observed = []
+
+    class Recorder(ComputeEstimator):
+        def observe(self, sig, b_pad, dt):
+            observed.append((sig, b_pad, dt))
+            super().observe(sig, b_pad, dt)
+
+    pol = FlushPolicy(kind="static", max_batch=1)
+    dts = {0: 0.1, 1: 4.0, 2: 0.1, 3: 0.1}      # req 1: straggler
+
+    def execute(fl):
+        rid = fl.requests[0].req_id
+        if rid == 3:
+            raise RuntimeError("boom")
+        return dts[rid], {}
+
+    service = run_service(
+        [req(i, n=10 * (i + 1) ** 2, arrival=0.0) for i in range(4)],
+        execute, pol, estimator=Recorder(alpha=1.0),
+        watchdog=StepWatchdog(threshold=2.0, warmup_steps=1))
+    # Straggler flagged on launch 1, error on launch 3; neither observed.
+    assert [l.get("straggler", False) for l in service["launches"]] == \
+        [False, True, False, False]
+    assert "error" in service["launches"][3]
+    assert [dt for (_, _, dt) in observed] == [0.1, 0.1]
+    assert summarize_service(service)["stragglers"] == 1
+
+
+def test_goodput_counts_healthy_on_time_only():
+    pol = FlushPolicy(kind="static", max_batch=1)
+    reqs = [req(0, arrival=0.0, deadline=1.0),
+            req(1, arrival=0.0, deadline=0.05),   # healthy but late
+            req(2, arrival=0.5, deadline=math.inf)]
+    service = run_service(reqs, lambda fl: (0.2, {2: VERDICT_FAILED}),
+                          pol)
+    summary = summarize_service(service)
+    # req 0 on time; req 1 misses its deadline; req 2 diverged.
+    span = max(r["arrival"] + r["latency_s"] for r in service["records"])
+    assert summary["goodput_rps"] == pytest.approx(1 / span)
+    assert summary["verdicts"] == {VERDICT_OK: 2, VERDICT_DIVERGED: 1}
 
 
 def test_make_arrivals_offered_load_and_shape():

@@ -1,0 +1,173 @@
+"""Chaos-harness tests (DESIGN.md §13).
+
+Unit level: the injector's seeded determinism, the once-per-flush
+transient-exception contract, and straggler dt inflation with untouched
+results. End-to-end: a small single-tenant stream under the full fault
+mix must complete with zero unhandled exceptions, give every corrupted
+request an explicit non-ok verdict, keep every healthy request's output
+bit-identical to the fault-free run (static policy — deterministic
+bucket composition — plus bit-exact co-lane independence), and never
+return NaN to a client.
+"""
+import dataclasses
+import types
+
+import numpy as np
+import pytest
+
+from repro.launch.chaos import (ChaosConfig, ChaosInjector,
+                                TransientComputeError)
+
+
+def test_chaos_config_validation():
+    with pytest.raises(ValueError):
+        ChaosConfig(nan_rate=1.5)
+    with pytest.raises(ValueError):
+        ChaosConfig(exception_rate=-0.1)
+    with pytest.raises(ValueError):
+        ChaosConfig(straggler_factor=0.5)
+    assert not ChaosConfig().active
+    mix = ChaosConfig.at_rate(0.1, seed=3)
+    assert mix.active and mix.seed == 3
+    assert mix.nan_rate == mix.exception_rate == mix.straggler_rate == 0.1
+
+
+def test_corrupt_requests_is_seed_deterministic():
+    reqs = [np.ones((8, 2)) * i for i in range(50)]
+    out1, faults1 = ChaosInjector(
+        ChaosConfig(seed=5, nan_rate=0.2)).corrupt_requests(reqs)
+    out2, faults2 = ChaosInjector(
+        ChaosConfig(seed=5, nan_rate=0.2)).corrupt_requests(reqs)
+    assert faults1 == faults2 and len(faults1) > 0
+    assert set(faults1.values()) == {"nan_obs"}
+    for i, (a, b) in enumerate(zip(out1, out2)):
+        np.testing.assert_array_equal(a, b)
+        assert np.isnan(a).any() == (i in faults1)
+    # Untouched requests are the SAME objects (no copy, no perturbation).
+    clean = [i for i in range(50) if i not in faults1]
+    assert all(out1[i] is reqs[i] for i in clean)
+
+
+def test_corrupt_requests_handles_tenant_pairs_and_outliers():
+    reqs = [("t%d" % i, np.ones((6, 2))) for i in range(40)]
+    out, faults = ChaosInjector(
+        ChaosConfig(seed=0, outlier_rate=0.3,
+                    outlier_scale=1e6)).corrupt_requests(reqs)
+    assert len(faults) > 0
+    assert set(faults.values()) == {"outlier_obs"}
+    for i, (tenant, ys) in enumerate(out):
+        assert tenant == "t%d" % i
+        if i in faults:
+            assert np.isfinite(ys).all()
+            assert np.abs(ys).max() >= 1e6
+
+
+def _flush(sig="s", at=0.0, req_ids=(0,)):
+    return types.SimpleNamespace(
+        signature=sig, at=at,
+        requests=[types.SimpleNamespace(req_id=r) for r in req_ids])
+
+
+def test_wrap_execute_raises_once_then_succeeds():
+    """The injected transient error fires at most once per flush
+    identity, so an in-place bounded retry runs the real executor."""
+    inj = ChaosInjector(ChaosConfig(seed=0, exception_rate=1.0))
+    calls = []
+
+    def execute(fl):
+        calls.append(fl.signature)
+        return 0.25, {0: "ok"}
+
+    chaotic = inj.wrap_execute(execute)
+    fl = _flush()
+    with pytest.raises(TransientComputeError):
+        chaotic(fl)
+    assert calls == []                       # fault precedes any work
+    dt, outcomes = chaotic(fl)               # retry of the SAME flush
+    assert calls == ["s"] and outcomes == {0: "ok"}
+    assert inj.log["exceptions"] == 1
+    # A different flush identity draws its own fault.
+    with pytest.raises(TransientComputeError):
+        chaotic(_flush(sig="other"))
+
+
+def test_wrap_execute_straggler_inflates_dt_not_results():
+    inj = ChaosInjector(ChaosConfig(seed=0, straggler_rate=1.0,
+                                    straggler_factor=4.0))
+    chaotic = inj.wrap_execute(lambda fl: (0.5, {7: "ok"}))
+    dt, outcomes = chaotic(_flush(req_ids=(7,)))
+    assert dt == pytest.approx(2.0)
+    assert outcomes == {7: "ok"}
+    assert inj.log["stragglers"] == 1
+    # Legacy float-returning executors are normalized too.
+    dt, outcomes = inj.wrap_execute(lambda fl: 0.5)(_flush(sig="legacy"))
+    assert outcomes == {}
+
+
+@pytest.fixture(scope="module")
+def chaos_serving_runs():
+    """One fault-free and one full-fault-mix run of the same small
+    stream on one warm server (shared by the e2e assertions below)."""
+    import jax
+    from repro.launch.autobatch import FlushPolicy, make_arrivals
+    from repro.launch.serve import SmootherServeConfig, SmootherServer
+    from repro.scenarios import get_scenario
+
+    jax.config.update("jax_enable_x64", True)
+    sc = get_scenario("coordinated_turn")
+    model = sc.make_model(np.float64)
+    cfg = SmootherServeConfig(requests=10, n=16, max_batch=4, n_iter=2,
+                              tol=1e-6, vary_lengths=False,
+                              arrival="bursty", policy="static",
+                              rate=32.0, burst_size=4)
+    rng_reqs = []
+    for i in range(cfg.requests):
+        _, ys = sc.simulate(model, cfg.n, jax.random.PRNGKey(100 + i))
+        rng_reqs.append(np.asarray(ys))
+    arrivals = make_arrivals("bursty", cfg.requests, cfg.rate,
+                             cfg.burst_size, seed=0)
+    server = SmootherServer(model, cfg, spec=sc.default_spec(
+        n_iter=cfg.n_iter, tol=cfg.tol))
+    policy = FlushPolicy(kind="static", max_batch=cfg.max_batch)
+    quiet = lambda *a, **k: None
+    clean = server.serve_stream(rng_reqs, arrivals, emit=quiet,
+                                policy=policy)
+    chaos = ChaosConfig(seed=2, nan_rate=0.25, exception_rate=0.5,
+                        straggler_rate=0.5)
+    faulty = server.serve_stream(rng_reqs, arrivals, emit=quiet,
+                                 policy=policy, chaos=chaos)
+    return clean, faulty
+
+
+def test_e2e_every_fault_gets_explicit_verdict(chaos_serving_runs):
+    _, faulty = chaos_serving_runs
+    corrupted = set(map(int, faulty["chaos"]["corrupted_requests"]))
+    assert corrupted, "seed must inject at least one corrupted request"
+    verdicts = {r["req_id"]: r["verdict"] for r in faulty["records"]}
+    for idx in corrupted:
+        assert verdicts[idx] in ("diverged", "retried", "shed")
+    assert faulty["chaos"]["exceptions"] >= 1
+    assert faulty["chaos"]["stragglers"] >= 1
+
+
+def test_e2e_healthy_requests_bit_identical_under_chaos(
+        chaos_serving_runs):
+    clean, faulty = chaos_serving_runs
+    ok = [r["req_id"] for r in faulty["records"]
+          if r["verdict"] == "ok"]
+    assert ok, "some requests must stay healthy"
+    for i in ok:
+        np.testing.assert_array_equal(clean["results"][i],
+                                      faulty["results"][i])
+        assert clean["logliks"][i] == faulty["logliks"][i]
+
+
+def test_e2e_no_nan_reaches_a_client(chaos_serving_runs):
+    _, faulty = chaos_serving_runs
+    shed = {r["req_id"] for r in faulty["records"]
+            if r["verdict"] == "shed"}
+    for i, mean in enumerate(faulty["results"]):
+        if i in shed:
+            continue
+        assert mean is not None
+        assert np.isfinite(mean).all(), f"NaN leaked to request {i}"

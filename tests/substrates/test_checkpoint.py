@@ -63,7 +63,7 @@ RESHARD_SNIPPET = r"""
 import jax, jax.numpy as jnp, numpy as np, tempfile, os
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import CheckpointManager
-from repro.runtime import reshard_state, shardings_for
+from repro.runtime.elastic import reshard_state, shardings_for
 
 d = tempfile.mkdtemp()
 mgr = CheckpointManager(d)
