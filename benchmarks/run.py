@@ -10,6 +10,10 @@ benches. Prints ``name,us_per_call,derived`` CSV (task spec deliverable
   models_bench       — reduced-config train steps for the arch zoo
   smoothers_bench    — batched multi-trajectory throughput (traj/sec for
                        B in {1, 8, 64, 256}; batched vs loop vs sequential)
+  backend_bench      — combine-backend crossover across T (compiled
+                       kernel vs fused-jnp vs jnp vs sequential; the
+                       arXiv 2511.10363 span-vs-work regime);
+                       ``--smoke`` is the CI backend="auto" gate
   serve_bench        — autobatching service latency: static vs
                        deadline-aware flush under poisson/bursty arrivals,
                        plus the multi-tenant mixed-scenario rows
@@ -59,7 +63,7 @@ def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--only", type=str, default=None,
                    help="comma-separated subset: fig1,convergence,kernels,"
-                        "models,smoothers,serve,scenarios")
+                        "models,smoothers,backend,serve,scenarios")
     p.add_argument("--quick", action="store_true",
                    help="smaller sizes for CI")
     p.add_argument("--json", type=str, default=None, metavar="PATH",
@@ -95,6 +99,11 @@ def main() -> None:
             rows += smoothers_bench.run(n=128, batches=(1, 8, 64))
         else:
             rows += smoothers_bench.run()
+    if only is None or "backend" in only:
+        from benchmarks import backend_bench
+        rows += backend_bench.run(
+            sizes=backend_bench.SIZES if args.quick
+            else backend_bench.SIZES_FULL)
     if only is None or "serve" in only:
         from benchmarks import serve_bench
         rows += serve_bench.run(quick=args.quick)

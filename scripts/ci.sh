@@ -36,13 +36,24 @@ diff -u tests/api_surface.txt "${SURFACE_TMP}"
 echo "== tier-1 tests (budget ${TEST_BUDGET}s) =="
 timeout "${TEST_BUDGET}" python -m pytest -x -q "$@"
 
+echo "== combine-kernel parity (Mosaic + Triton lowerings, interpret) =="
+timeout 900 python -m pytest -x -q tests/kernels/test_kalman_combine.py \
+    tests/kernels/test_triton_combine.py
+
+echo "== backend dispatch smoke (auto never slower than fused) =="
+# Asserts internally: the backend="auto" autotuner never records a
+# choice slower than the fused twin on this host, and off-accelerator a
+# combine_impl="pallas" spec runs the fused fallback (within 2x wall
+# clock, bit-identical outputs) instead of an interpret-mode kernel.
+timeout 300 python -m benchmarks.backend_bench --smoke
+
 echo "== scenario smoke matrix (scenario x linearization x form) =="
 timeout 900 python -m repro.scenarios.smoke --n 24 --iters 3
 
 echo "== quick perf paths (budget ${BENCH_BUDGET}s) =="
 BENCH_OUT="$(mktemp -d)/BENCH_ci_quick.json"
 timeout "${BENCH_BUDGET}" python -m benchmarks.run \
-    --quick --only fig1,kernels,smoothers,serve,scenarios \
+    --quick --only fig1,kernels,smoothers,backend,serve,scenarios \
     --json "${BENCH_OUT}"
 
 echo "== chaos smoke (fault-injection acceptance, budget ${CHAOS_BUDGET}s) =="

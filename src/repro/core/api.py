@@ -47,17 +47,12 @@ from . import iterated as _iterated
 from . import parallel as _parallel
 from . import sequential as _sequential
 from . import sqrt_parallel as _sqrt
-from .iterated import (COMBINE_IMPLS, DAMPINGS, FORMS, IteratedConfig,
-                       validate_iteration_knobs)
+from .iterated import (BACKENDS, COMBINE_IMPLS, DAMPINGS, FORMS,
+                       IteratedConfig, validate_iteration_knobs)
 from .sigma_points import SCHEMES
 
 MODES = ("parallel", "sequential")
 LINEARIZATIONS = ("taylor", "slr")
-#: ``backend`` is reserved for later PRs (Pallas-on-GPU / Triton
-#: lowering of the combine kernels); only "auto" has behavior today, but
-#: the field already participates in ``spec_id`` so adding backends
-#: re-keys every cache built on it instead of silently reusing one.
-BACKENDS = ("auto", "xla", "pallas")
 
 _SPEC_ID_VERSION = "v1"
 
@@ -87,7 +82,12 @@ class SmootherSpec:
                             twin for batched runs);
       * ``jitter``        — SLR covariance jitter;
       * ``model_id``      — scenario content hash (registry tenants);
-      * ``backend``       — reserved accelerator-dispatch axis.
+      * ``backend``       — compiled-kernel dispatch: "auto" (measured
+                            kernel-vs-fused autotuner, cached per
+                            ``spec_id``; see :meth:`Smoother.autotune`),
+                            "jnp" (fused twins only, never a kernel),
+                            "tpu" / "gpu" (force that Pallas lowering;
+                            degrades to fused + warning off-platform).
 
     Validation happens at construction: bad axis names or nonsensical
     iteration knobs raise ``ValueError`` immediately instead of failing
@@ -115,6 +115,10 @@ class SmootherSpec:
         _check_choice("combine_impl", self.combine_impl, COMBINE_IMPLS)
         _check_choice("backend", self.backend, BACKENDS)
         _check_choice("damping", self.damping, DAMPINGS)
+        if self.combine_impl == "pallas" and self.backend == "jnp":
+            raise ValueError(
+                'combine_impl="pallas" contradicts backend="jnp" '
+                "(a compiled kernel with kernels disabled) — drop one")
         if self.form == "sqrt" and self.mode == "sequential":
             raise ValueError(
                 'form="sqrt" requires mode="parallel": no sequential '
@@ -176,7 +180,8 @@ class SmootherSpec:
             sigma_scheme=cfg.sigma_scheme,
             n_iter=cfg.n_iter, tol=cfg.tol, lm_lambda=cfg.lm_lambda,
             combine_impl=cfg.combine_impl, jitter=cfg.jitter,
-            model_id=cfg.model_id, damping=cfg.damping)
+            model_id=cfg.model_id, damping=cfg.damping,
+            backend=cfg.backend)
         kw.update(overrides)
         return cls(**kw)
 
@@ -194,7 +199,7 @@ class SmootherSpec:
             sigma_scheme=self.sigma_scheme, lm_lambda=self.lm_lambda,
             combine_impl=self.combine_impl, jitter=self.jitter,
             tol=self.tol, model_id=self.spec_id, form=self.form,
-            damping=self.damping)
+            damping=self.damping, backend=self.backend)
 
 
 class Smoother:
@@ -223,6 +228,32 @@ class Smoother:
     def __repr__(self) -> str:
         return f"Smoother({self.spec!r})"
 
+    @staticmethod
+    def _launch_shape(ys, m0):
+        """Static ``(B, T, nx)`` of a batched call site (None for single
+        trajectories) — the ``backend="auto"`` autotune-cache key."""
+        if ys.ndim != 3:
+            return None
+        return (int(ys.shape[0]), int(ys.shape[1]), int(m0.shape[-1]))
+
+    # -- backend autotuning -------------------------------------------------
+
+    def autotune(self, B: int, n: int, nx: int) -> dict:
+        """Measure compiled-kernel vs fused-jnp combine for ``(B, n, nx)``
+        launches and cache the winner under this smoother's ``spec_id``.
+
+        Host-side and idempotent per shape: `build_smoother` (via
+        ``autotune_for``) and server warmup call this once per bucket
+        signature; subsequent builds/warmups hit the in-process cache.
+        After it runs, ``backend="auto"`` call sites of this shape
+        dispatch to the measured winner — never a path slower than the
+        fused twin (on hosts with no compiled lowering nothing is
+        measured and the choice is always "fused"). Returns the cache
+        entry ``{choice, backend, kernel_us, fused_us}``.
+        """
+        from repro.kernels.kalman_combine import autotune as _at
+        return _at.autotune(self.spec_id, B, n, nx)
+
     # -- one linearized pass ------------------------------------------------
 
     def filter(self, lin, ys, m0, P0):
@@ -243,7 +274,8 @@ class Smoother:
         fn = (_parallel.parallel_filter_batched if batched
               else _parallel.parallel_filter)
         return fn(lin, ys, m0, P0,
-                  combine_impl=self.config.resolved_combine_impl(batched))
+                  combine_impl=self.config.resolved_combine_impl(
+                      batched, shape=self._launch_shape(ys, m0)))
 
     def smooth(self, lin, ys, m0, P0):
         """One filtering + smoothing pass over a linearized SSM.
@@ -263,7 +295,8 @@ class Smoother:
         fn = (_parallel._parallel_filter_smoother_batched if batched
               else _parallel.parallel_filter_smoother)
         return fn(lin, ys, m0, P0,
-                  combine_impl=self.config.resolved_combine_impl(batched))
+                  combine_impl=self.config.resolved_combine_impl(
+                      batched, shape=self._launch_shape(ys, m0)))
 
     # -- the full iterated smoother ----------------------------------------
 
@@ -299,17 +332,27 @@ class Smoother:
                              jitter=self.spec.jitter)
 
 
-def build_smoother(spec: Optional[SmootherSpec] = None, **axes) -> Smoother:
+def build_smoother(spec: Optional[SmootherSpec] = None, *,
+                   autotune_for: Optional[tuple] = None,
+                   **axes) -> Smoother:
     """Build the configured estimator for ``spec``.
 
     Field overrides may be passed directly instead of a spec
     (``build_smoother(linearization="slr", n_iter=5)``).
+
+    ``autotune_for=(B, n, nx)`` runs :meth:`Smoother.autotune` for that
+    launch shape before returning, so ``backend="auto"`` call sites of
+    the shape dispatch to the measured winner from the first trace.
+    Cached per ``(spec_id, shape)`` — repeated builds don't re-measure.
     """
     if spec is None:
         spec = SmootherSpec(**axes)
     elif axes:
         spec = dataclasses.replace(spec, **axes)
-    return Smoother(spec)
+    smoother = Smoother(spec)
+    if autotune_for is not None:
+        smoother.autotune(*autotune_for)
+    return smoother
 
 
 # ---------------------------------------------------------------------------

@@ -45,6 +45,11 @@ jtm = jax.tree_util.tree_map
 FORMS = ("standard", "sqrt")
 COMBINE_IMPLS = ("auto", "jnp", "fused", "pallas")
 DAMPINGS = ("fixed", "adaptive")
+#: Compiled-kernel dispatch axis: "auto" (measured autotuner — kernel vs
+#: fused-jnp per (B, T, nx), cached per spec_id), "jnp" (never lower a
+#: kernel: fused twins only), "tpu" / "gpu" (force that lowering; falls
+#: back to fused with a warning off-platform).
+BACKENDS = ("auto", "jnp", "tpu", "gpu")
 
 #: `LaneStatus.code` vocabulary (DESIGN.md §13): the per-lane verdict of
 #: the outer Gauss-Newton loop.
@@ -90,6 +95,7 @@ class IteratedConfig:
     model_id: str = ""              # scenario content hash (registry tenants)
     form: str = "standard"          # "standard" | "sqrt" (parallel only)
     damping: str = "fixed"          # "fixed" | "adaptive" (per-lane LM)
+    backend: str = "auto"           # "auto" | "jnp" | "tpu" | "gpu"
 
     def __post_init__(self):
         """Eager validation: a bad axis name or iteration knob must fail
@@ -115,14 +121,52 @@ class IteratedConfig:
         if self.damping not in DAMPINGS:
             raise ValueError(f"unknown damping {self.damping!r}; "
                              f"available: {sorted(DAMPINGS)}")
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; "
+                             f"available: {sorted(BACKENDS)}")
+        if self.combine_impl == "pallas" and self.backend == "jnp":
+            raise ValueError(
+                'combine_impl="pallas" contradicts backend="jnp" '
+                "(a compiled kernel with kernels disabled) — drop one")
         validate_iteration_knobs(self.n_iter, self.tol, self.lm_lambda,
                                  self.jitter)
 
-    def resolved_combine_impl(self, batched: bool) -> str:
-        """"auto" = textbook vmap for single trajectories, the fused
-        batch-vectorized combine for the batched fast path."""
+    def resolved_combine_impl(self, batched: bool,
+                              shape: Optional[tuple] = None) -> str:
+        """The scan-driver ``combine_impl`` string for one call site.
+
+        ``shape`` is the static launch shape ``(B, T, nx)`` when the
+        caller knows it (the batched pass drivers do) — it keys the
+        ``backend="auto"`` autotune-cache lookup. Resolution:
+
+          * explicit ``combine_impl`` wins; "pallas" is qualified to
+            "pallas:tpu"/"pallas:gpu" when the backend forces a lowering
+            (off-platform the scan driver degrades it to fused + warns);
+          * "auto" + single trajectory -> "jnp" (textbook vmap);
+          * "auto" + batched: ``backend="jnp"`` -> "fused";
+            ``backend="tpu"/"gpu"`` -> that compiled kernel;
+            ``backend="auto"`` -> the measured winner recorded by
+            `repro.kernels.kalman_combine.autotune` for
+            ``(model_id, B, T, nx)`` — ``model_id`` carries the spec_id
+            on API-built smoothers — else the fused twin (the safe
+            default: an unmeasured site is never slower than fused).
+
+        Pure host-side lookup, trace-stable for a fixed cache state
+        (warmup/build populates the cache before tracing).
+        """
         if self.combine_impl == "auto":
-            return "fused" if batched else "jnp"
+            if not batched:
+                return "jnp"
+            if self.backend in ("tpu", "gpu"):
+                return f"pallas:{self.backend}"
+            if self.backend == "auto" and shape is not None:
+                # Late import: kernels depend on core.
+                from repro.kernels.kalman_combine import autotune as kc_at
+                if kc_at.decide(self.model_id, *shape) == kc_at.CHOICE_KERNEL:
+                    return "pallas"
+            return "fused"
+        if self.combine_impl == "pallas" and self.backend in ("tpu", "gpu"):
+            return f"pallas:{self.backend}"
         return self.combine_impl
 
     def cache_key(self, n_pad: int, b_pad: int, nx: int) -> tuple:
@@ -255,7 +299,10 @@ def _one_pass_batched(model: StateSpaceModel, ys: jnp.ndarray,
         else:
             _, smoothed = parallel._parallel_filter_smoother_batched(
                 lin, ys_eff, model.m0, model.P0,
-                combine_impl=cfg.resolved_combine_impl(batched=True))
+                combine_impl=cfg.resolved_combine_impl(
+                    batched=True,
+                    shape=(ys.shape[0], ys.shape[1],
+                           traj.mean.shape[-1])))
     else:
         _, smoothed = sequential._filter_smoother_batched(
             lin, ys_eff, model.m0, model.P0)

@@ -60,11 +60,26 @@ def _batched_combine(combine: Callable, combine_impl: str,
         if fused is not None:
             return fused, False
         return jax.vmap(combine), True
-    if combine_impl == "pallas":
+    if combine_impl == "pallas" or combine_impl.startswith("pallas:"):
         # Late import: kernels depend on core for their reference oracles.
+        # "pallas" takes the platform's compiled lowering; "pallas:tpu" /
+        # "pallas:gpu" / "pallas:interpret" force one (the spec's
+        # ``backend`` axis resolves to these — see
+        # `IteratedConfig.resolved_combine_impl`).
         from repro.kernels.kalman_combine import ops as kc_ops
-        return kc_ops.batched_combine_for(combine,
-                                          total_elems=total_elems), True
+        requested = combine_impl.partition(":")[2] or None
+        backend = kc_ops.resolve_backend(requested)
+        if backend is None:
+            # Off-accelerator there is no compiled lowering and interpret
+            # mode is pathologically slow — take the fused jnp twin
+            # (resolve_backend already warned once). Unknown combines have
+            # no twin; vmap is the only safe fallback.
+            fused = kc_ops.fused_batched_combine_for(combine)
+            if fused is not None:
+                return fused, False
+            return jax.vmap(combine), True
+        return kc_ops.batched_combine_for(combine, total_elems=total_elems,
+                                          backend=backend), True
     raise ValueError(f"unknown combine_impl {combine_impl!r}")
 
 
@@ -96,8 +111,11 @@ def associative_scan(combine: Callable, elems, *, reverse: bool = False,
       combine: pair combine in ``(earlier, later)`` order (unbatched).
       reverse: suffix scan (e.g. smoothing) instead of prefix scan.
       combine_impl: "jnp" (vmapped textbook combine), "fused" (batch-
-        vectorized jnp twin of the kernel math — the off-TPU fast path for
-        large batched scans), or "pallas" (TPU kernel / interpret).
+        vectorized jnp twin of the kernel math — the off-accelerator fast
+        path for large batched scans), or "pallas" (compiled kernel:
+        Mosaic on TPU, Triton on GPU; off-accelerator it degrades to the
+        fused twin with a one-time warning). "pallas:tpu" / "pallas:gpu" /
+        "pallas:interpret" force a specific lowering.
       axis_name: if set, run the cross-device sharded scan along this bound
         mesh axis (caller must be inside `shard_map`); the time axis of
         ``elems`` is the per-device shard. Batch axes are never sharded.

@@ -1,9 +1,13 @@
 """Public jit'd wrappers for the fused Kalman combine kernels.
 
-Dispatch policy:
+Dispatch policy (DESIGN.md §2/§12):
   * TPU backend -> compiled Pallas (Mosaic) kernel;
-  * other backends -> the same kernel in interpret mode for large batches,
-    or the jnp reference for tiny inputs where kernel overhead dominates.
+  * GPU backend -> compiled Pallas (Triton) kernel (`triton.py`);
+  * CPU / no compiled lowering -> the fused jnp twins. Interpret-mode
+    pallas is *never* a dispatch target: it is orders of magnitude
+    slower than the fused twins, so forcing ``combine_impl="pallas"``
+    where only interpret mode exists falls back to the fused path and
+    warns once per process.
 
 The kernel-vs-reference choice is **trace-stable**: it is made once per
 call site from the *total* element count of the scan (`select_impl`), not
@@ -16,11 +20,12 @@ the whole scan.
 `batched_combine_for` adapts a *scalar* core combine (as passed to
 `repro.core.scan.associative_scan`) to its fused batched kernel — this is
 the hook `combine_impl="pallas"` uses; the scan driver passes the static
-total element count down.
+total element count and the resolved kernel backend down.
 """
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Optional
 
 import jax
@@ -32,58 +37,154 @@ from . import ref as _ref
 
 _MIN_KERNEL_BATCH = 8
 
+#: Kernel lowerings a caller may force. "interpret" is a debug/test
+#: escape hatch (the parity suites use it on CPU); dispatch never picks
+#: it on its own.
+KERNEL_BACKENDS = ("tpu", "gpu", "interpret")
 
-def _use_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+_warned: set = set()
 
 
-def select_impl(total_elems: Optional[int]) -> str:
-    """Static policy: "kernel" or "ref" from the call site's element count.
+def _warn_once(key: str, msg: str) -> None:
+    if key not in _warned:
+        _warned.add(key)
+        warnings.warn(msg, RuntimeWarning, stacklevel=3)
+
+
+def kernel_backend() -> Optional[str]:
+    """The platform's *compiled* kernel lowering: "tpu" (Mosaic), "gpu"
+    (Triton), or ``None`` where only interpret mode exists (CPU)."""
+    plat = jax.default_backend()
+    if plat == "tpu":
+        return "tpu"
+    if plat == "gpu":
+        return "gpu"
+    return None
+
+
+def resolve_backend(requested: Optional[str] = None) -> Optional[str]:
+    """Resolve a requested kernel backend against the host platform.
+
+    ``None`` (auto) takes the platform lowering; ``None`` comes back on
+    hosts with no compiled lowering — the caller must fall back to the
+    fused/ref path (the off-accelerator dispatch bugfix: interpret-mode
+    pallas is pathologically slower than the fused twins and must never
+    be the silent default). An explicit "tpu"/"gpu" that does not match
+    the host also degrades to ``None`` with a one-time warning — forcing
+    a Mosaic kernel on CPU can only mean interpret mode. "interpret" is
+    honored as requested (tests opt in deliberately).
+    """
+    have = kernel_backend()
+    if requested is None:
+        if have is None:
+            _warn_once(
+                "pallas-no-lowering",
+                'combine_impl="pallas" has no compiled lowering on '
+                f'backend "{jax.default_backend()}" — falling back to the '
+                "fused jnp combine (interpret-mode pallas would be "
+                "orders of magnitude slower). Use combine_impl=\"fused\" "
+                "to silence this warning.")
+        return have
+    if requested == "interpret":
+        return "interpret"
+    if requested not in KERNEL_BACKENDS:
+        raise ValueError(f"unknown kernel backend {requested!r}; "
+                         f"available: {sorted(KERNEL_BACKENDS)}")
+    if requested != have:
+        _warn_once(
+            f"pallas-wrong-platform-{requested}",
+            f'backend="{requested}" kernels cannot compile on host '
+            f'platform "{jax.default_backend()}" — falling back to the '
+            "fused jnp combine.")
+        return None
+    return requested
+
+
+def select_impl(total_elems: Optional[int],
+                backend: Optional[str] = None) -> str:
+    """Static policy: "kernel", "fused", or "ref" from the call site's
+    element count and resolved kernel backend.
 
     ``total_elems`` is the number of elements entering the scan (B * T for
     a batched scan), a Python int known at trace time — never a per-level
-    pair count. ``None`` (unknown) defaults to the kernel path.
+    pair count. ``None`` (unknown) defaults to the kernel path *on hosts
+    with a compiled lowering*; off-accelerator the default is the fused
+    jnp twin (never interpret mode — the dispatch bugfix this policy
+    encodes).
     """
+    if backend is None:
+        backend = kernel_backend()
+    if backend is None:
+        return "fused"
     if total_elems is not None and total_elems < _MIN_KERNEL_BATCH:
         return "ref"
     return "kernel"
 
 
-def filtering_combine_op(ei, ej, *, tile: int = 512, impl: str = "auto"):
+def _kernel_call(combine_kind: str, ei, ej, tile: int, backend: str):
+    if backend == "gpu":
+        from . import triton as _t
+        fn = (_t.filtering_combine_batched_triton if combine_kind == "f"
+              else _t.smoothing_combine_batched_triton)
+        return fn(ei, ej)
+    # "tpu" -> compiled Mosaic; "interpret" -> the same kernel in
+    # interpret mode (explicit test/debug opt-in only).
+    fn = (_k.filtering_combine_batched if combine_kind == "f"
+          else _k.smoothing_combine_batched)
+    return fn(ei, ej, tile=tile, interpret=backend == "interpret")
+
+
+def filtering_combine_op(ei, ej, *, tile: int = 512, impl: str = "auto",
+                         backend: Optional[str] = None):
     B = ei.b.shape[0]
     if impl == "auto":
-        impl = select_impl(B)
+        impl = select_impl(B, backend)
     # B == 0 happens on degenerate scan levels (lax.associative_scan slices
     # can be empty); pallas_call rejects a zero grid, the vmap ref is a
     # no-op there. Static shape, so this never flips within a trace.
     if impl == "ref" or B == 0:
         return _ref.filtering_combine_batched_ref(ei, ej)
-    return _k.filtering_combine_batched(ei, ej, tile=tile,
-                                        interpret=_use_interpret())
+    if impl == "fused":
+        return _k.filtering_combine_batched_jnp(ei, ej)
+    kb = backend if backend is not None else kernel_backend()
+    if kb is None:
+        return _k.filtering_combine_batched_jnp(ei, ej)
+    return _kernel_call("f", ei, ej, tile, kb)
 
 
-def smoothing_combine_op(ei, ej, *, tile: int = 512, impl: str = "auto"):
+def smoothing_combine_op(ei, ej, *, tile: int = 512, impl: str = "auto",
+                         backend: Optional[str] = None):
     B = ei.g.shape[0]
     if impl == "auto":
-        impl = select_impl(B)
+        impl = select_impl(B, backend)
     if impl == "ref" or B == 0:
         return _ref.smoothing_combine_batched_ref(ei, ej)
-    return _k.smoothing_combine_batched(ei, ej, tile=tile,
-                                        interpret=_use_interpret())
+    if impl == "fused":
+        return _k.smoothing_combine_batched_jnp(ei, ej)
+    kb = backend if backend is not None else kernel_backend()
+    if kb is None:
+        return _k.smoothing_combine_batched_jnp(ei, ej)
+    return _kernel_call("s", ei, ej, tile, kb)
 
 
-def batched_combine_for(combine, total_elems: Optional[int] = None):
+def batched_combine_for(combine, total_elems: Optional[int] = None,
+                        backend: Optional[str] = None):
     """Map a core combine fn to its fused batched kernel.
 
     The returned operator is pinned to one implementation chosen from
-    ``total_elems`` (see `select_impl`), so every level of the enclosing
-    scan dispatches identically.
+    ``total_elems`` and the resolved ``backend`` (see `select_impl`), so
+    every level of the enclosing scan dispatches identically. ``backend``
+    must already be resolved (`resolve_backend`) — ``None`` here means
+    "platform default", which off-accelerator routes every level to the
+    fused twin.
     """
-    impl = select_impl(total_elems)
+    impl = select_impl(total_elems, backend)
     if combine is filtering_combine:
-        return functools.partial(filtering_combine_op, impl=impl)
+        return functools.partial(filtering_combine_op, impl=impl,
+                                 backend=backend)
     if combine is smoothing_combine:
-        return functools.partial(smoothing_combine_op, impl=impl)
+        return functools.partial(smoothing_combine_op, impl=impl,
+                                 backend=backend)
     # Unknown combine: fall back to vmap (e.g. user-supplied operators).
     return jax.vmap(combine)
 

@@ -211,13 +211,34 @@ class ComputeEstimator:
         self.alpha = float(alpha)
         self.default = float(default)
         self._ema: Dict[Tuple[Signature, int], float] = {}
+        #: Keys whose only observation is a cold (possibly jit-compiling)
+        #: first launch: kept as a provisional estimate but *replaced* —
+        #: not blended — by the next observation, so one compile-poisoned
+        #: timing can't skew deadline decisions until the EMA decays.
+        self._cold: set = set()
 
-    def observe(self, sig: Signature, b_pad: int, dt: float) -> None:
+    def observe(self, sig: Signature, b_pad: int, dt: float,
+                warmed: bool = False) -> None:
+        """Record a measured launch. ``warmed=True`` marks a trustworthy
+        post-compile timing (server warmup measures one): it seeds the
+        EMA directly. An unmarked *first* observation per key is treated
+        as cold — held provisionally, then discarded when the next
+        observation arrives (the first real launch of an executable pays
+        jit compilation, often orders of magnitude above steady state).
+        """
         key = (sig, int(b_pad))
         old = self._ema.get(key)
-        self._ema[key] = (float(dt) if old is None
-                          else self.alpha * float(dt)
-                          + (1.0 - self.alpha) * old)
+        if old is None:
+            self._ema[key] = float(dt)
+            if not warmed:
+                self._cold.add(key)
+            return
+        if key in self._cold:
+            # Second observation: drop the poisoned cold seed entirely.
+            self._cold.discard(key)
+            self._ema[key] = float(dt)
+            return
+        self._ema[key] = self.alpha * float(dt) + (1.0 - self.alpha) * old
 
     def estimate(self, sig: Signature, b_pad: int) -> float:
         key = (sig, int(b_pad))
@@ -225,7 +246,12 @@ class ComputeEstimator:
             return self._ema[key]
         widths = [w for (s, w) in self._ema if s == sig]
         if widths:
-            w = min(widths, key=lambda w: abs(w - b_pad))
+            # Tie-break equidistant widths toward the *larger* one
+            # (deterministic regardless of observation order, and the
+            # larger width's per-element cost is the safer deadline
+            # bound — amortized overheads make small-B timings optimistic
+            # when scaled up).
+            w = min(widths, key=lambda w: (abs(w - b_pad), -w))
             return self._ema[(sig, w)] * (b_pad / w)
         return self.default
 

@@ -133,6 +133,16 @@ def serve(serve_cfg: ServeConfig, emit=print) -> dict:
 R_PAD_SCALE = 1e8  # measurement-noise inflation on padded time steps
 
 
+def _backend_choices() -> Dict[str, str]:
+    """The autotuner's measured combine-backend verdicts so far, keyed
+    ``spec_id@platform/B=../T=../nx=..`` — surfaced in service stats so
+    operators can see which buckets run the compiled kernel vs the fused
+    twin (DESIGN.md §12)."""
+    from repro.kernels.kalman_combine import autotune as kc_autotune
+
+    return {k: v["choice"] for k, v in kc_autotune.cache_entries().items()}
+
+
 @dataclasses.dataclass
 class SmootherServeConfig:
     requests: int = 64
@@ -341,6 +351,13 @@ class SmootherServer:
         for n_pad in sorted(set(n_pads)):
             dummy = [np.zeros((n_pad, ny))]
             for b_pad in sorted(set(b_pads)):
+                # backend="auto": measure kernel-vs-fused for this bucket
+                # shape *before* the executable traces, so the trace bakes
+                # in the measured winner (idempotent per (spec_id, shape);
+                # on hosts with no compiled lowering it records "fused"
+                # without timing anything).
+                if self.spec.backend == "auto":
+                    self._smoother.autotune(b_pad, n_pad, self.model.nx)
                 key = self._icfg.cache_key(n_pad, b_pad, self.model.nx)
                 if key not in self.signatures_seen:
                     self.smooth_batch(dummy, n_pad, b_pad)  # compile
@@ -356,8 +373,11 @@ class SmootherServer:
                     iters = float(np.mean(np.asarray(info.iterations)))
                     if self._icfg.tol > 0.0 and iters >= 1.0:
                         dt *= self._icfg.n_iter / iters
+                    # warmed: this is a post-compile timing — it may seed
+                    # the EMA directly (the estimator discards unmarked
+                    # first observations as compile-poisoned).
                     estimator.observe(self.queue_signature(n_pad), b_pad,
-                                      dt)
+                                      dt, warmed=True)
 
     def warmup_retry(self, n_pads):
         """Pre-compile the bounded-retry and fallback executables for the
@@ -560,6 +580,7 @@ class SmootherServer:
             "mean_iterations": iters_total / max(len(requests), 1),
             "compiles": len(self.signatures_seen),
             "records": service["records"],
+            "backend_choices": _backend_choices(),
             "chaos": (injector.summary() if injector is not None
                       else None),
         })
@@ -772,6 +793,7 @@ class MultiTenantServer:
                             for s in self.servers.values()),
             "records": service["records"],
             "launch_log": service["launches"],
+            "backend_choices": _backend_choices(),
             "chaos": (injector.summary() if injector is not None
                       else None),
         })

@@ -199,7 +199,7 @@ def test_spec_id_deterministic_and_field_sensitive():
     changed = dict(mode="sequential", form="sqrt", linearization="slr",
                    sigma_scheme="unscented", n_iter=7, tol=1e-5,
                    lm_lambda=2.0, combine_impl="fused", jitter=1e-9,
-                   model_id="pendulum:def456", backend="pallas",
+                   model_id="pendulum:def456", backend="gpu",
                    damping="adaptive")
     ids = {spec.spec_id}
     for field, value in changed.items():

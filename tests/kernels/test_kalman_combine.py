@@ -106,11 +106,69 @@ def test_dispatch_helper():
 
 def test_select_impl_is_static():
     """The policy is a pure function of the call site's total element
-    count — a Python int, never a traced value or per-level batch size."""
-    assert ops.select_impl(None) == "kernel"
-    assert ops.select_impl(ops._MIN_KERNEL_BATCH) == "kernel"
-    assert ops.select_impl(ops._MIN_KERNEL_BATCH - 1) == "ref"
-    assert ops.select_impl(10_000) == "kernel"
+    count and resolved backend — a Python int/str, never a traced value
+    or per-level batch size."""
+    # With a kernel backend: kernel above the threshold, ref below.
+    assert ops.select_impl(None, backend="interpret") == "kernel"
+    assert ops.select_impl(ops._MIN_KERNEL_BATCH,
+                           backend="interpret") == "kernel"
+    assert ops.select_impl(ops._MIN_KERNEL_BATCH - 1,
+                           backend="interpret") == "ref"
+    # No backend argument: the host platform's lowering decides. Where
+    # none exists (CPU CI) the default is the fused twin at EVERY size —
+    # never an interpret-mode kernel (the off-TPU dispatch bugfix).
+    expect = "fused" if ops.kernel_backend() is None else "kernel"
+    assert ops.select_impl(None) == expect
+    assert ops.select_impl(10_000) == expect
+
+
+def test_off_accelerator_pallas_falls_back_to_fused():
+    """Forcing combine_impl="pallas" where only interpret mode exists
+    must (a) warn once, (b) produce bit-identical outputs to the fused
+    twin — the scan runs the *same* fused code, not a slow kernel."""
+    import warnings
+
+    from repro.core import associative_scan, filtering_combine
+
+    if ops.kernel_backend() is not None:
+        pytest.skip("host has a compiled kernel lowering")
+    rng = np.random.default_rng(3)
+    elems = _rand_filtering(rng, 32, 3, jnp.float64)
+    ops._warned.discard("pallas-no-lowering")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        out_p = associative_scan(filtering_combine, elems,
+                                 combine_impl="pallas")
+        out_p2 = associative_scan(filtering_combine, elems,
+                                  combine_impl="pallas")
+    msgs = [str(x.message) for x in w
+            if "no compiled lowering" in str(x.message)]
+    assert len(msgs) == 1, f"expected exactly one warning, got {msgs}"
+    out_f = associative_scan(filtering_combine, elems,
+                             combine_impl="fused")
+    for a, b, c in zip(out_p, out_f, out_p2):
+        assert bool(jnp.all(a == b)) and bool(jnp.all(a == c))
+
+
+def test_wrong_platform_backend_degrades_with_warning():
+    """backend="tpu"/"gpu" on a mismatched host resolves to None (fused
+    fallback) with a one-time warning; "interpret" is honored; unknown
+    names raise."""
+    import warnings
+
+    have = ops.kernel_backend()
+    wrong = "tpu" if have != "tpu" else "gpu"
+    ops._warned.discard(f"pallas-wrong-platform-{wrong}")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        assert ops.resolve_backend(wrong) is None
+        assert ops.resolve_backend(wrong) is None
+    assert sum("cannot compile" in str(x.message) for x in w) == 1
+    assert ops.resolve_backend("interpret") == "interpret"
+    if have is not None:
+        assert ops.resolve_backend(have) == have
+    with pytest.raises(ValueError):
+        ops.resolve_backend("cuda")
 
 
 @pytest.mark.parametrize("n,expect", [(32, "kernel"), (4, "ref")])
@@ -140,7 +198,11 @@ def test_dispatch_is_trace_stable_across_scan_levels(monkeypatch, n,
 
     rng = np.random.default_rng(0)
     elems = _rand_filtering(rng, n, 3, jnp.float64)
-    out = associative_scan(filtering_combine, elems, combine_impl="pallas")
+    # "pallas:interpret" forces the kernel lowering so the dispatch-path
+    # counters below see kernel-vs-ref choices even on CPU CI (plain
+    # "pallas" correctly degrades to the fused twin off-accelerator).
+    out = associative_scan(filtering_combine, elems,
+                           combine_impl="pallas:interpret")
     jax.block_until_ready(out.b)
     other = "ref" if expect == "kernel" else "kernel"
     assert counts[expect] > 0

@@ -154,7 +154,7 @@ def test_static_policy_only_flushes_on_fill_or_drain():
 def test_estimator_scales_unseen_widths():
     est = ComputeEstimator(alpha=0.5, default=0.123)
     assert est.estimate(sig(16), 4) == pytest.approx(0.123)  # unseen sig
-    est.observe(sig(16), 4, 0.2)
+    est.observe(sig(16), 4, 0.2, warmed=True)
     assert est.estimate(sig(16), 4) == pytest.approx(0.2)
     assert est.estimate(sig(16), 8) == pytest.approx(0.4)    # linear in B
     assert est.estimate(sig(16), 2) == pytest.approx(0.1)
@@ -164,6 +164,43 @@ def test_estimator_scales_unseen_widths():
     # to the default, never the other tenant's EMA).
     assert est.estimate(sig(16, model_id="m:2"), 4) == \
         pytest.approx(0.123)
+
+
+def test_estimator_discards_cold_first_observation():
+    """Regression: the first launch of an executable includes jit
+    compilation; its timing is held only provisionally and must be
+    *replaced* — not EMA-blended — by the next observation."""
+    est = ComputeEstimator(alpha=0.5, default=0.0)
+    est.observe(sig(16), 4, 10.0)              # cold: compile-poisoned
+    # Better than nothing until a warm launch lands:
+    assert est.estimate(sig(16), 4) == pytest.approx(10.0)
+    est.observe(sig(16), 4, 0.1)               # first warm launch
+    # Old behavior would give 0.5*0.1 + 0.5*10.0 = 5.05 — deadline
+    # decisions 50x off until the EMA decays.
+    assert est.estimate(sig(16), 4) == pytest.approx(0.1)
+    est.observe(sig(16), 4, 0.3)               # normal EMA from here on
+    assert est.estimate(sig(16), 4) == pytest.approx(0.2)
+
+
+def test_estimator_warmed_observation_seeds_directly():
+    """A warmup-measured (post-compile) timing is trusted: it seeds the
+    EMA and subsequent observations blend normally."""
+    est = ComputeEstimator(alpha=0.5, default=0.0)
+    est.observe(sig(16), 4, 0.1, warmed=True)
+    est.observe(sig(16), 4, 0.3)
+    assert est.estimate(sig(16), 4) == pytest.approx(0.2)  # blended
+
+
+def test_estimator_width_extrapolation_tie_break():
+    """Equidistant observed widths must resolve deterministically to the
+    *larger* one, regardless of observation order (regression: the old
+    min(..., key=abs) kept whichever dict order happened to yield)."""
+    for first, second in [((2, 0.1), (6, 0.6)), ((6, 0.6), (2, 0.1))]:
+        est = ComputeEstimator(alpha=1.0)
+        est.observe(sig(16), first[0], first[1], warmed=True)
+        est.observe(sig(16), second[0], second[1], warmed=True)
+        # b_pad=4 is equidistant from 2 and 6: the larger width (6) wins.
+        assert est.estimate(sig(16), 4) == pytest.approx(0.6 * 4 / 6)
 
 
 def test_run_service_latency_accounting():
